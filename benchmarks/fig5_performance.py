@@ -1,0 +1,40 @@
+"""Paper Fig. 5: end-to-end time of the four stencil codes.
+
+Timeline model at paper scale (1152^3 f64, V100/PCIe constants,
+'paper' schedule = pipelined cuZFP with per-call sync overhead),
+plus the beyond-paper 'overlap' schedule and the TPU-v5e projection.
+Derived column reports speedup vs code 1. Paper measured:
+code2 1.16x, code3 1.18x, code4 1.20x.
+"""
+
+from repro.core.outofcore import OOCConfig, paper_code_fields
+from repro.core.pipeline import TPU_V5E_HOST, V100_PCIE, sweep_timeline
+
+from benchmarks.common import emit
+
+SHAPE = (1152, 1152, 1152)
+SWEEPS = 4  # 48 time steps; speedups are sweep-periodic
+
+
+def run() -> None:
+    base = {}
+    for sched, hw, dtype, f32 in (
+        ("paper", V100_PCIE, "float64", False),
+        ("overlap", V100_PCIE, "float64", False),
+        ("overlap", TPU_V5E_HOST, "float32", True),
+    ):
+        for code in (1, 2, 3, 4):
+            cfg = OOCConfig(
+                SHAPE, 8, 12, paper_code_fields(code, f32=f32),
+                dtype=dtype,
+            )
+            tl = sweep_timeline(cfg, hw, sweeps=SWEEPS, schedule=sched)
+            key = (sched, hw.name)
+            if code == 1:
+                base[key] = tl.makespan
+            speedup = base[key] / tl.makespan
+            emit(
+                f"fig5/{hw.name}/{sched}/code{code}",
+                tl.makespan * 1e6 / SWEEPS,
+                f"speedup={speedup:.3f}x bound={tl.bounding_resource()}",
+            )

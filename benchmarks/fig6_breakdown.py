@@ -1,0 +1,37 @@
+"""Paper Fig. 6: execution-time breakdown for one 12-step sweep.
+
+Per-kind busy time (h2d / decompress / stencil / compress / d2h) and
+the bounding operation, paper scale + V100 constants. The paper's
+observation to reproduce: codes 1-3 are bounded by CPU->GPU transfer,
+code 4 flips to (codec-inflated) GPU compute. The CPU-code bar of the
+original figure is modeled at 40-thread Xeon throughput (~1e9 pt/s).
+"""
+
+from repro.core.outofcore import OOCConfig, paper_code_fields
+from repro.core.pipeline import V100_PCIE, sweep_timeline
+
+from benchmarks.common import emit
+
+SHAPE = (1152, 1152, 1152)
+CPU_PTS_PER_S = 1.0e9  # 40-thread Xeon 4110, f64 25-pt
+
+
+def run() -> None:
+    for code in (1, 2, 3, 4):
+        cfg = OOCConfig(
+            SHAPE, 8, 12, paper_code_fields(code, f32=False),
+            dtype="float64",
+        )
+        tl = sweep_timeline(cfg, V100_PCIE, sweeps=1, schedule="paper")
+        busy = tl.busy()
+        parts = " ".join(
+            f"{k}={v:.2f}s" for k, v in sorted(busy.items())
+        )
+        emit(
+            f"fig6/code{code}",
+            tl.makespan * 1e6,
+            f"bound={tl.bounding_resource()} {parts}",
+        )
+    cells = SHAPE[0] * SHAPE[1] * SHAPE[2] * 12
+    emit("fig6/cpu_reference", cells / CPU_PTS_PER_S * 1e6,
+         "40-thread Xeon model")

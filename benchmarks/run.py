@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper table/figure + framework
+micro-benches. Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        codec_throughput,
+        fig5_performance,
+        fig6_breakdown,
+        fig7_precision,
+        stencil_throughput,
+        transfer_savings,
+    )
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod in (
+        fig5_performance,
+        fig6_breakdown,
+        fig7_precision,
+        codec_throughput,
+        stencil_throughput,
+        transfer_savings,
+    ):
+        mod.run()
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""25-point stencil kernel throughput (oracle, XLA-compiled on CPU) —
+the compute leg of the pipeline model's calibration."""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.stencil import ops, ref
+
+
+def run() -> None:
+    shape = (96, 96, 96)
+    key = jax.random.PRNGKey(0)
+    p_prev = jax.random.normal(key, shape, jnp.float32)
+    p_cur = jax.random.normal(key, shape, jnp.float32)
+    vel2 = jnp.full(shape, 0.07, jnp.float32)
+    ppad, cpad = ref.pad_bc(p_prev), ref.pad_bc(p_cur)
+    step = jax.jit(lambda a, b, v: ops.wave_step(a, b, v))
+    us = time_fn(step, ppad, cpad, vel2)
+    cells = shape[0] * shape[1] * shape[2]
+    emit("stencil/wave_step/96cubed", us,
+         f"{cells/us:.1f}Mcell/s")
+    tsteps = jax.jit(
+        lambda a, b, v: ops.temporal_steps(a, b, v, steps=4)
+    )
+    us = time_fn(tsteps, p_prev, p_cur, vel2)
+    emit("stencil/temporal_block4/96cubed", us,
+         f"{4*cells/us:.1f}Mcell/s")

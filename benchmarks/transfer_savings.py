@@ -1,0 +1,46 @@
+"""Wire-byte accounting of the out-of-core engine (measured, not
+modeled): separate-compression sharing + on-the-fly compression.
+
+Derived column: end-to-end wire reduction vs the naive engine
+(no sharing, no compression) — the paper's two mechanisms separated.
+"""
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.blocks import BlockPlan
+from repro.core.outofcore import OOCConfig, OutOfCoreWave, \
+    paper_code_fields
+from repro.kernels.stencil import ref as stencil_ref
+
+SHAPE = (96, 32, 32)
+NDIV, BT = 4, 2
+
+
+def run() -> None:
+    import time
+
+    p_cur = np.asarray(stencil_ref.ricker_source(SHAPE), np.float32)
+    p_prev = 0.97 * p_cur
+    vel2 = np.full(SHAPE, 0.06, np.float32)
+    plan = BlockPlan(SHAPE[0], NDIV, BT)
+    plane_b = SHAPE[1] * SHAPE[2] * 4
+    naive_h2d = sum(
+        plan.h2d_planes(i, shared=False) for i in range(NDIV)
+    ) * plane_b * 3  # 3 streamed fields
+    for code in (1, 2, 3, 4):
+        eng = OutOfCoreWave(
+            OOCConfig(SHAPE, NDIV, BT, paper_code_fields(code)),
+            p_prev, p_cur, vel2,
+        )
+        t0 = time.perf_counter()
+        eng.sweep()
+        us = (time.perf_counter() - t0) * 1e6
+        tot = eng.transfer_summary()
+        emit(
+            f"transfer/code{code}",
+            us,
+            f"h2d_wire={tot['h2d_wire']/1e6:.2f}MB "
+            f"d2h_wire={tot['d2h_wire']/1e6:.2f}MB "
+            f"vs_naive_h2d={naive_h2d/max(tot['h2d_wire'],1):.2f}x",
+        )

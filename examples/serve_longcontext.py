@@ -1,0 +1,53 @@
+"""Serving with the paper's technique at the decode memory boundary:
+continuous batching + fixed-rate compressed KV cache.
+
+  PYTHONPATH=src python examples/serve_longcontext.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke
+from repro.models import kvcache as KV
+from repro.models import model as M
+from repro.serving.engine import ServeEngine
+
+cfg = smoke(get_config("qwen2-1.5b"))
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+# --- 1. continuous-batching engine -------------------------------------
+eng = ServeEngine(cfg, params, slots=3, max_len=128)
+rng = np.random.default_rng(0)
+for i in range(5):
+    eng.submit(rng.integers(1, cfg.vocab_size, 5).tolist(), max_new=6)
+done = eng.run_all()
+print(f"[serve] completed {len(done)} requests on 3 slots "
+      f"(continuous batching)")
+
+# --- 2. compressed KV cache: capacity math + numerics -------------------
+planes = 8
+B, KVH, D, H = 1, cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+max_len = KV.CHUNK * 8
+ckv = KV.init_compressed_kv(B, max_len=max_len, kv_heads=KVH,
+                            head_dim=D, planes=planes,
+                            dtype=jnp.float32)
+keys = jax.random.split(jax.random.PRNGKey(1), 2 * KV.CHUNK * 2)
+for t in range(KV.CHUNK * 2):
+    k = 0.5 * jax.random.normal(keys[2 * t], (B, 1, KVH, D))
+    v = 0.5 * jax.random.normal(keys[2 * t + 1], (B, 1, KVH, D))
+    ckv = KV.append_token(ckv, k, v, planes=planes)
+raw = 2 * B * max_len * KVH * D * 4
+print(
+    f"[kv] {int(ckv.length)} tokens cached; storage "
+    f"{KV.compressed_bytes(ckv)/1e3:.0f}kB vs raw {raw/1e3:.0f}kB "
+    f"({raw/KV.compressed_bytes(ckv):.2f}x) at rate {planes}/32"
+)
+q = jax.random.normal(jax.random.PRNGKey(2), (B, 1, H, D))
+out = KV.compressed_decode_attention(q, ckv, planes=planes,
+                                     max_len=max_len)
+print(f"[kv] compressed-cache attention output norm "
+      f"{float(jnp.linalg.norm(out)):.3f} (finite: "
+      f"{bool(jnp.all(jnp.isfinite(out)))})")
+print("\nAt qwen2-72b decode_32k scale this is the difference between "
+      "5.4GB and 1.6GB of KV per chip — see EXPERIMENTS.md §Perf.")

@@ -1,0 +1,30 @@
+"""End-to-end LM training driver (deliverable b): ~100M params,
+checkpoint + resume, heartbeat logging.
+
+Thin wrapper over the production launcher:
+
+  PYTHONPATH=src python examples/train_lm.py            # quick demo
+  PYTHONPATH=src python examples/train_lm.py --full     # 100M, 300 steps
+"""
+
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    if "--full" in sys.argv:
+        argv = [
+            "--preset", "lm-100m", "--steps", "300", "--batch", "8",
+            "--seq", "512", "--ckpt-dir", "/tmp/repro_ckpt_100m",
+            "--ckpt-every", "100",
+        ]
+    else:
+        argv = [
+            "--preset", "lm-tiny", "--steps", "30", "--batch", "8",
+            "--seq", "128", "--ckpt-dir", "/tmp/repro_ckpt_tiny",
+            "--ckpt-every", "15",
+        ]
+    sys.argv = [sys.argv[0]] + argv + [
+        a for a in sys.argv[1:] if a != "--full"
+    ]
+    train.main()

@@ -1,0 +1,4 @@
+"""repro: on-the-fly compression for out-of-core streaming compute
+(Shen et al. 2021) at multi-pod TPU scale. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,93 @@
+"""Compressed activation checkpointing — the paper's technique applied
+to the training memory boundary.
+
+``jax.checkpoint`` trades memory for recompute; ``compressed_checkpoint``
+trades it for codec throughput instead: the forward pass saves
+*fixed-rate ZFP-compressed* residuals (4-8x smaller) and the backward
+pass decompresses them — exactly the paper's RW-dataset streaming,
+with HBM capacity playing the role of the PCIe link. On smooth
+activations the rate-16/32 error is ~1e-3 of block max, well under
+bf16 training noise; see tests/test_remat.py for the gradient-error
+comparison against exact remat.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.zfp import ops as zfp_ops
+from repro.kernels.zfp import ref as zfp_ref
+
+
+def _compressible(x) -> bool:
+    return (
+        isinstance(x, jax.Array)
+        and jnp.issubdtype(x.dtype, jnp.floating)
+        and x.size >= 64
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+class ZfpResidual:
+    """A compressed residual leaf (pytree-registered so it can flow
+    through custom_vjp)."""
+
+    def __init__(self, comp, shape, dtype):
+        self.comp, self.shape, self.dtype = comp, shape, dtype
+
+    def tree_flatten(self):
+        return (self.comp,), (self.shape, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    def restore(self):
+        return (
+            zfp_ops.decompress(self.comp)
+            .reshape(self.shape)
+            .astype(self.dtype)
+        )
+
+
+def compress_tree(tree, planes: int):
+    def enc(x):
+        if not _compressible(x):
+            return x
+        flat = x.reshape(-1).astype(jnp.float32)
+        c = zfp_ops.compress(flat, planes=planes, ndim=1)
+        return ZfpResidual(c, x.shape, str(x.dtype))
+
+    return jax.tree.map(enc, tree)
+
+
+def decompress_tree(tree):
+    return jax.tree.map(
+        lambda t: t.restore() if isinstance(t, ZfpResidual) else t,
+        tree,
+        is_leaf=lambda t: isinstance(t, ZfpResidual),
+    )
+
+
+def compressed_checkpoint(fn, planes: int = 12):
+    """jax.checkpoint-alike that stores ZFP-compressed residuals."""
+
+    @jax.custom_vjp
+    def wrapped(*args):
+        return fn(*args)
+
+    def fwd(*args):
+        out = fn(*args)
+        return out, compress_tree(args, planes)
+
+    def bwd(res, g):
+        args = decompress_tree(res)
+        _, vjp = jax.vjp(fn, *args)
+        return vjp(g)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped

@@ -1,0 +1,63 @@
+"""Compressed gradient synchronization (paper technique, pod axis).
+
+Cross-pod data parallelism reduces gradients over the slowest links.
+Fixed-rate compression of the gradient payload with *error feedback*
+(residual carried into the next step, Seide et al. 2014 / Karimireddy
+et al. 2019) halves-to-quarters the wire bytes at negligible quality
+cost.
+
+Numerics vs wire format: under GSPMD the reduction happens inside the
+backward pass, so this module applies the error-feedback quantisation
+to the *summed* gradient — bit-identical to compress-after-local-reduce
+with a shared codebook, which is the scheme whose wire bytes the
+§Roofline collective-term variant accounts (collective bytes scaled by
+``planes/32 + header``). The `shard_map`-over-pod wire-format variant
+lowers the all-reduce in uint32 payload form; see EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.zfp import ops as zfp_ops
+from repro.optim.adamw import AdamWState
+
+
+def quantize_leaf(g: jax.Array, planes: int) -> jax.Array:
+    if not jnp.issubdtype(g.dtype, jnp.floating) or g.size < 64:
+        return g
+    flat = g.reshape(-1).astype(jnp.float32)
+    q = zfp_ops.quantize(flat, planes=planes, ndim=1)
+    return q.reshape(g.shape).astype(g.dtype)
+
+
+def compress_grads(
+    grads, opt_state: AdamWState, planes: int
+) -> Tuple[object, AdamWState]:
+    """Error-feedback fixed-rate gradient compression."""
+    if opt_state.ef is None:
+        return jax.tree.map(lambda g: quantize_leaf(g, planes), grads), (
+            opt_state
+        )
+
+    def step(g, e):
+        tot = g.astype(jnp.float32) + e
+        q = quantize_leaf(tot, planes)
+        return q.astype(g.dtype), tot - q.astype(jnp.float32)
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_e = jax.tree.leaves(opt_state.ef)
+    out = [step(g, e) for g, e in zip(leaves_g, leaves_e)]
+    new_g = jax.tree.unflatten(treedef, [t[0] for t in out])
+    new_e = jax.tree.unflatten(treedef, [t[1] for t in out])
+    return new_g, opt_state._replace(ef=new_e)
+
+
+def wire_ratio(planes: int, dtype_bits: int = 32) -> float:
+    """Collective-byte scale factor for the roofline variant."""
+    from repro.kernels.zfp.ref import bits_per_value
+
+    return bits_per_value(1, planes) / dtype_bits

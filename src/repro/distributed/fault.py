@@ -1,0 +1,109 @@
+"""Fault tolerance & straggler mitigation (cluster-control plane).
+
+No real cluster exists in this container, so this module implements the
+*logic* — heartbeat tracking, straggler detection, elastic replanning,
+preemption-safe restart points — with deterministic unit tests
+(tests/test_fault.py) and hooks used by the out-of-core scheduler and
+the training launcher:
+
+  * ``HeartbeatMonitor``: per-worker progress tracking; flags workers
+    slower than ``threshold`` x the rolling median step time, and dead
+    workers after ``dead_after`` missed beats.
+  * ``ElasticPlan``: given the healthy-device count, picks the largest
+    (data, model) mesh <= available that keeps model parallelism and
+    divides the global batch — checkpoint ``place()`` then resumes on
+    the degraded mesh (restore is mesh-agnostic by design).
+  * ``ReissuePolicy``: for the out-of-core pipeline, a straggling
+    transfer task is reissued on the spare stream once it exceeds
+    ``factor`` x its expected duration (the DES in core.pipeline
+    validates the makespan win under injected stragglers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class WorkerState:
+    last_step: int = -1
+    last_beat: float = 0.0
+    step_times: List[float] = dataclasses.field(default_factory=list)
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: int, *, straggler_factor: float = 2.0,
+                 dead_after: float = 60.0):
+        self.workers = {i: WorkerState() for i in range(workers)}
+        self.factor = straggler_factor
+        self.dead_after = dead_after
+
+    def beat(self, worker: int, step: int, now: float) -> None:
+        w = self.workers[worker]
+        if w.last_step >= 0 and step > w.last_step:
+            dt = (now - w.last_beat) / max(1, step - w.last_step)
+            w.step_times.append(dt)
+            if len(w.step_times) > 32:
+                w.step_times.pop(0)
+        w.last_step, w.last_beat = step, now
+
+    def median_step_time(self) -> Optional[float]:
+        times = [
+            statistics.median(w.step_times)
+            for w in self.workers.values()
+            if w.step_times
+        ]
+        return statistics.median(times) if times else None
+
+    def stragglers(self, now: float) -> List[int]:
+        med = self.median_step_time()
+        if med is None:
+            return []
+        out = []
+        for i, w in self.workers.items():
+            if w.step_times and statistics.median(
+                w.step_times
+            ) > self.factor * med:
+                out.append(i)
+        return out
+
+    def dead(self, now: float) -> List[int]:
+        return [
+            i
+            for i, w in self.workers.items()
+            if w.last_beat and now - w.last_beat > self.dead_after
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+
+    @property
+    def devices(self) -> int:
+        return self.data * self.model
+
+
+def replan(
+    healthy_devices: int, *, model_parallel: int, global_batch: int
+) -> ElasticPlan:
+    """Largest usable mesh on the surviving devices: model parallelism
+    is fixed (weights must fit), the data axis shrinks to the largest
+    divisor of global_batch that fits."""
+    assert healthy_devices >= model_parallel, "cannot fit the model"
+    max_data = healthy_devices // model_parallel
+    data = max(
+        d for d in range(1, max_data + 1) if global_batch % d == 0
+    )
+    return ElasticPlan(data, model_parallel)
+
+
+@dataclasses.dataclass
+class ReissuePolicy:
+    factor: float = 3.0
+
+    def should_reissue(self, elapsed: float, expected: float) -> bool:
+        return elapsed > self.factor * expected

@@ -1,0 +1,143 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates tensors with *logical* axis names; a rules table
+maps logical names to mesh axes. Swapping the table re-shards the whole
+model — that is the knob the §Perf hillclimb turns.
+
+Outside a mesh context every annotation is a no-op, so the same model
+code runs single-device smoke tests and 512-way dry-runs unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Optional[str | Tuple[str, ...]]]
+
+# Baseline rule set: FSDP over `data`, tensor parallel over `model`,
+# pure data parallel over `pod`. (See configs for per-run overrides.)
+DEFAULT_RULES: Rules = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "moe_experts": "model",
+    "vocab_out": "model",
+    # params
+    "p_vocab": "model",
+    "p_embed": "data",
+    "p_heads": "model",
+    "p_kv_heads": "model",
+    "p_mlp": "model",
+    "p_experts": "model",
+    "p_embed_alt": None,  # second embed axis on attn/mlp weights
+    # optimizer / cache
+    "cache_batch": ("pod", "data"),
+    "cache_seq": "model",
+    "cache_kv_heads": None,
+}
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Rules):
+    old = (getattr(_state, "mesh", None), getattr(_state, "rules", None))
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = old
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def resolve_spec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]] = None,
+    rules: Optional[Rules] = None,
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Map logical axes -> PartitionSpec, dropping mesh axes that do not
+    divide the dimension (replicate instead) and axes used twice."""
+    rules = rules if rules is not None else (current_rules() or {})
+    mesh = mesh if mesh is not None else current_mesh()
+    used: set = set()
+    out = []
+    for i, name in enumerate(logical_axes):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            out.append(None)
+            continue
+        flat = tuple(
+            a
+            for a in (axis if isinstance(axis, tuple) else (axis,))
+            if mesh is None or a in mesh.shape  # drop absent mesh axes
+        )
+        if not flat or any(a in used for a in flat):
+            out.append(None)
+            continue
+        axis = flat if isinstance(axis, tuple) else flat[0]
+        if mesh is not None and shape is not None:
+            if shape[i] % _mesh_axis_size(mesh, axis) != 0:
+                out.append(None)
+                continue
+        used.update(flat)
+        out.append(axis)
+    return P(*out)
+
+
+def logical(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without rules)."""
+    rules, mesh = current_rules(), current_mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = resolve_spec(axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _is_axes_leaf(a) -> bool:
+    """An axes annotation is a plain tuple of axis names (NamedTuples
+    like AdamWState/DecodeCache must keep being traversed)."""
+    return isinstance(a, tuple) and not hasattr(a, "_fields") and all(
+        e is None or isinstance(e, str) for e in a
+    )
+
+
+def named_sharding_tree(axes_tree, shape_tree, mesh: Mesh, rules: Rules):
+    """Build a NamedSharding pytree from a logical-axes pytree (for
+    jit in_shardings of params/optimizer/caches)."""
+    return jax.tree.map(
+        lambda axes, sds: NamedSharding(
+            mesh, resolve_spec(axes, sds.shape, rules, mesh)
+        ),
+        axes_tree,
+        shape_tree,
+        is_leaf=_is_axes_leaf,
+    )

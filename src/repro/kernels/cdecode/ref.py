@@ -1,0 +1,4 @@
+"""Oracle for the fused kernel: the compositional decompress-then-
+attend path (repro.models.kvcache.compressed_decode_attention)."""
+
+from repro.models.kvcache import compressed_decode_attention as reference

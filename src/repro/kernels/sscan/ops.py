@@ -1,0 +1,13 @@
+"""jit wrapper + traffic model for the selective-scan kernel."""
+
+from __future__ import annotations
+
+from repro.kernels.sscan.kernel import selective_scan_pallas
+
+
+def hbm_traffic_bytes(bsz: int, s: int, d: int, n: int,
+                      fused: bool) -> int:
+    """Per-layer HBM bytes of the selective scan (f32)."""
+    io = bsz * s * (2 * d + 2 * n) * 4  # dt, x, B, C in; y out ~ d
+    state_stream = bsz * s * d * n * 4 * 3  # decay+inp write, h read
+    return io + (0 if fused else state_stream)

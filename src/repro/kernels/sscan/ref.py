@@ -1,0 +1,4 @@
+"""Oracle: the chunk-local XLA form (itself tested against a direct
+sequential recurrence in tests/test_ssm_forms.py)."""
+
+from repro.models.ssm import chunked_selective_scan as reference

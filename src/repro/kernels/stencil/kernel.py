@@ -1,0 +1,110 @@
+"""Pallas TPU kernel for the 25-point acoustic stencil.
+
+Tiling strategy (TPU adaptation of the paper's CUDA kernel):
+
+* Grid over (z-tiles, y-tiles) with tile = HALO = 4 planes in z and y;
+  the x axis stays whole inside a tile so the minor (lane) dimension is
+  long and contiguous — x-shifts are pure VREG slices.
+* The 4-plane halo along z and y is expressed with *shifted BlockSpecs*:
+  the padded p_cur array is passed 9 times with index maps
+  (kz+dz, ky+dy, 0), dz,dy in {0,1,2}. Because the tile size equals the
+  halo, interior block kz of the output aligns exactly with padded
+  block kz+1, and the 3x3 neighbourhood concatenation *is* the
+  (bz+2h, by+2h) extended tile — no re-slicing, no partial blocks.
+  On real hardware Pallas pipelining keeps re-fetched neighbour blocks
+  resident in VMEM across consecutive grid steps.
+* VMEM per grid step at X=1152: 9 inputs * 4*4*1160*4B = 0.64 MiB
+  + p_prev/vel2/p_next/lap = 0.3 MiB — far inside 16 MiB. The stencil
+  is VPU-bound (no MXU), matching the paper's memory-bound analysis.
+
+Validated against ``ref.wave_step`` in interpret mode
+(tests/test_stencil_kernel.py sweeps shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import C, C0, HALO
+
+_B = HALO  # z/y tile size; must equal HALO for block alignment (see above)
+
+
+def _wave_kernel(*refs):
+    # refs: 9 neighbour views of padded p_cur (dz-major), p_prev centre
+    # (padded-x), vel2 centre, then outputs p_next, lap.
+    nb = refs[:9]
+    pprev_ref, vel2_ref, pnext_ref, lap_ref = refs[9:13]
+    h = HALO
+    rows = []
+    for dz in range(3):
+        rows.append(
+            jnp.concatenate([nb[3 * dz + dy][...] for dy in range(3)], axis=1)
+        )
+    ext = jnp.concatenate(rows, axis=0)  # (3h+.., 3h.., XP) = (12, 12, XP)
+    zdim, ydim, xp = ext.shape
+    c = ext[h:-h, h:-h, h:-h]
+    lap = 3.0 * C0 * c
+    for k, ck in enumerate(C, start=1):
+        lap = lap + ck * (
+            ext[h + k : zdim - h + k, h:-h, h:-h]
+            + ext[h - k : zdim - h - k, h:-h, h:-h]
+            + ext[h:-h, h + k : ydim - h + k, h:-h]
+            + ext[h:-h, h - k : ydim - h - k, h:-h]
+            + ext[h:-h, h:-h, h + k : xp - h + k]
+            + ext[h:-h, h:-h, h - k : xp - h - k]
+        )
+    p_prev = pprev_ref[...][:, :, h:-h]
+    vel2 = vel2_ref[...]
+    pnext_ref[...] = 2.0 * c - p_prev + vel2 * lap
+    lap_ref[...] = lap
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wave_step_pallas(
+    p_prev: jax.Array,
+    p_cur: jax.Array,
+    vel2: jax.Array,
+    *,
+    interpret: bool = True,
+):
+    """One acoustic step. p_prev/p_cur: padded (Z+8, Y+8, X+8) f32;
+    vel2: interior (Z, Y, X). Returns (p_next, lap), both interior.
+    Z and Y must be multiples of 4 (= HALO = tile size)."""
+    zp, yp, xp = p_cur.shape
+    z, y, x = zp - 2 * HALO, yp - 2 * HALO, xp - 2 * HALO
+    assert vel2.shape == (z, y, x), (vel2.shape, (z, y, x))
+    assert z % _B == 0 and y % _B == 0, (z, y)
+    grid = (z // _B, y // _B)
+
+    def nb_spec(dz, dy):
+        return pl.BlockSpec(
+            (_B, _B, xp), lambda kz, ky, dz=dz, dy=dy: (kz + dz, ky + dy, 0)
+        )
+
+    in_specs = [nb_spec(dz, dy) for dz in range(3) for dy in range(3)]
+    in_specs.append(
+        pl.BlockSpec((_B, _B, xp), lambda kz, ky: (kz + 1, ky + 1, 0))
+    )
+    in_specs.append(pl.BlockSpec((_B, _B, x), lambda kz, ky: (kz, ky, 0)))
+    out_specs = [
+        pl.BlockSpec((_B, _B, x), lambda kz, ky: (kz, ky, 0)),
+        pl.BlockSpec((_B, _B, x), lambda kz, ky: (kz, ky, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((z, y, x), p_cur.dtype),
+        jax.ShapeDtypeStruct((z, y, x), p_cur.dtype),
+    ]
+    args = [p_cur] * 9 + [p_prev, vel2]
+    return pl.pallas_call(
+        _wave_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)

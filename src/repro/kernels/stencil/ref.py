@@ -1,0 +1,100 @@
+"""Pure-jnp oracle for the paper's 25-point acoustic-wave stencil.
+
+The paper's application (§VI) is an acoustic wave propagator from
+Shen et al., IEICE 2020 [3]: a 25-point stencil = 8th-order central
+second differences along each of the 3 axes (4 neighbours per side per
+axis = 24 points + centre). Four datasets, exactly as Table I:
+
+  * ``p_prev``  read-write (pressure at t-1)
+  * ``p_cur``   read-write (pressure at t)
+  * ``lap``     write-only scratch (the Laplacian intermediate)
+  * ``vel2``    read-only (v^2 * dt^2 / dx^2, absorbs all constants)
+
+Update: ``p_next = 2 p_cur - p_prev + vel2 * lap8(p_cur)``.
+
+Arrays carry a HALO=4 ghost shell on every face (paper Table I:
+``(1152 + 2*HALO)^3, HALO=4``); the oracle and the Pallas kernel both
+consume padded arrays and emit interior-shaped outputs.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+HALO = 4  # spatial radius (8th order)
+
+# 8th-order central-difference coefficients for d2/dx2.
+C0 = -205.0 / 72.0
+C = (8.0 / 5.0, -1.0 / 5.0, 8.0 / 315.0, -1.0 / 560.0)
+
+
+def pad_bc(u: jax.Array, halo: int = HALO) -> jax.Array:
+    """Dirichlet (zero) ghost shell on every face."""
+    return jnp.pad(u, halo)
+
+
+def laplacian8(up: jax.Array) -> jax.Array:
+    """8th-order Laplacian of a padded field. up: (Z+8, Y+8, X+8) ->
+    interior (Z, Y, X)."""
+    h = HALO
+    c = up[h:-h, h:-h, h:-h]
+    lap = 3.0 * C0 * c
+    for k, ck in enumerate(C, start=1):
+        lap = lap + ck * (
+            up[h + k : up.shape[0] - h + k, h:-h, h:-h]
+            + up[h - k : up.shape[0] - h - k, h:-h, h:-h]
+            + up[h:-h, h + k : up.shape[1] - h + k, h:-h]
+            + up[h:-h, h - k : up.shape[1] - h - k, h:-h]
+            + up[h:-h, h:-h, h + k : up.shape[2] - h + k]
+            + up[h:-h, h:-h, h - k : up.shape[2] - h - k]
+        )
+    return lap
+
+
+def wave_step(
+    p_prev: jax.Array, p_cur: jax.Array, vel2: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """One acoustic time step on padded fields.
+
+    p_prev, p_cur: (Z+8, Y+8, X+8) padded; vel2: (Z, Y, X) interior.
+    Returns (p_next interior, lap interior) — lap is the paper's
+    write-only dataset.
+    """
+    h = HALO
+    lap = laplacian8(p_cur)
+    p_next = (
+        2.0 * p_cur[h:-h, h:-h, h:-h] - p_prev[h:-h, h:-h, h:-h] + vel2 * lap
+    )
+    return p_next, lap
+
+
+def run_steps(
+    p_prev: jax.Array,
+    p_cur: jax.Array,
+    vel2: jax.Array,
+    steps: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """In-core reference simulation (interior-shaped inputs), used as the
+    ground truth for the out-of-core engine tests. Returns interior
+    (p_prev, p_cur) after ``steps`` steps with zero BC."""
+
+    def body(carry, _):
+        pp, pc = carry
+        p_next, _ = wave_step(pad_bc(pp), pad_bc(pc), vel2)
+        return (pc, p_next), None
+
+    (pp, pc), _ = jax.lax.scan(body, (p_prev, p_cur), None, length=steps)
+    return pp, pc
+
+
+def ricker_source(shape: Tuple[int, int, int], dtype=jnp.float32) -> jax.Array:
+    """Smooth initial condition: a Ricker-like wavelet in the volume
+    centre (gives wave fields representative of the paper's workload)."""
+    z, y, x = [jnp.arange(s, dtype=dtype) - (s - 1) / 2 for s in shape]
+    r2 = (
+        z[:, None, None] ** 2 + y[None, :, None] ** 2 + x[None, None, :] ** 2
+    ) / (max(shape) / 8) ** 2
+    return (1.0 - 2.0 * r2) * jnp.exp(-r2)

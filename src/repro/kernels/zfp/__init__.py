@@ -1,0 +1,4 @@
+from . import kernel, ops, ref
+from .ref import Compressed
+
+__all__ = ["kernel", "ops", "ref", "Compressed"]

@@ -1,0 +1,161 @@
+"""Pallas TPU kernels for the fixed-rate ZFP-style codec.
+
+TPU adaptation notes (vs cuZFP's CUDA implementation):
+
+* cuZFP assigns one warp per 4^d block and uses warp shuffles /
+  ``__ballot_sync`` for the bit-plane transpose. TPUs have no warp
+  semantics; instead each grid step encodes a *tile* of ``TB`` blocks
+  held in VMEM and performs every stage (exponent extraction, fixed-point
+  conversion, lifting, negabinary, plane packing) as wide VPU ops over
+  the ``(TB, 4^d)`` tile. The bit-plane transpose becomes a masked
+  shift-accumulate, which is dense and branch-free.
+
+* The kernels consume *block-major* layout ``(nb, 4^d)``. The out-of-core
+  engine keeps streamed datasets in this layout on the host so the codec
+  hot path contains no in-kernel transposes (Mosaic-friendly); layout
+  conversion (``ref.blockify``) happens once per block transfer as a
+  cheap XLA reshape outside the kernel.
+
+* Exponents are extracted with IEEE-754 bit manipulation rather than
+  ``frexp`` (no libm in Mosaic). With the ``_EMAX_FLOOR`` clamp this is
+  bit-identical to the oracle, including zero/denormal blocks.
+
+* cuZFP's per-bit-plane group testing (the sequential part the paper
+  § IV complains about in cuSZ) is dropped: in fixed-rate mode,
+  truncation at a fixed plane is equivalent and branch-free.
+
+Validated against ``ref.py`` in interpret mode (this container is
+CPU-only); see tests/test_zfp_kernel.py for the shape/dtype/rate sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Tile size: blocks encoded per grid step. VMEM footprint at TB=256,
+# ndim=3, planes<=32: in 64 KiB + bits intermediate <=2 MiB + out 32 KiB.
+DEFAULT_TILE_BLOCKS = 256
+
+
+def _emax_tile(x: jax.Array) -> jax.Array:
+    """Per-block max frexp-style exponent via IEEE-754 bits. x: (TB, N) f32."""
+    bits = lax.bitcast_convert_type(x, jnp.int32)
+    raw = (bits >> 23) & 0xFF
+    e = jnp.where(raw == 0, jnp.int32(-126), raw - 126)
+    # zeros/denormals both map to -126 which is below the -90 floor, so
+    # the clamp makes this agree exactly with ref._exponent + floor.
+    return jnp.maximum(jnp.max(e, axis=-1), jnp.int32(-90))
+
+
+def _encode_kernel(
+    x_ref, masks_ref, perm_ref, payload_ref, emax_ref,
+    *, planes: int, ndim: int,
+):
+    x = x_ref[...]
+    emax = _emax_tile(x)
+    scale = lax.bitcast_convert_type((26 - emax + 127) << 23, jnp.float32)
+    q = jnp.rint(x * scale[:, None]).astype(jnp.int32)
+    c = ref.fwd_transform(q, ndim)
+    u = ref.truncate_planes(
+        ref.to_negabinary(c), planes, ndim, masks=masks_ref[...][0]
+    )
+    payload_ref[...] = ref.pack_planes(u, planes, ndim, perm=perm_ref[...][0])
+    emax_ref[...] = emax[:, None]
+
+
+def _decode_kernel(
+    payload_ref, emax_ref, inv_perm_ref, x_ref, *, planes: int, ndim: int
+):
+    u = ref.unpack_planes(
+        payload_ref[...], planes, ndim, jnp.float32,
+        inv_perm=inv_perm_ref[...][0],
+    )
+    c = ref.from_negabinary(u)
+    q = ref.inv_transform(c, ndim)
+    emax = emax_ref[...][:, 0]
+    scale = lax.bitcast_convert_type((emax - 26 + 127) << 23, jnp.float32)
+    x_ref[...] = q.astype(jnp.float32) * scale[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("planes", "ndim", "tile_blocks", "interpret")
+)
+def encode_pallas(
+    xb: jax.Array,
+    *,
+    planes: int,
+    ndim: int,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
+    interpret: bool = True,
+):
+    """xb: (nb, 4^ndim) f32, nb divisible by tile_blocks.
+    Returns (payload (nb, W) uint32, emax (nb, 1) int32)."""
+    nb, n = xb.shape
+    assert n == ref.block_size(ndim)
+    assert nb % tile_blocks == 0, (nb, tile_blocks)
+    nwords = ref.payload_words(ndim, planes)
+    grid = (nb // tile_blocks,)
+    # static tables passed as inputs (Pallas kernels may not capture
+    # constant arrays); replicated to every grid step.
+    masks = jnp.asarray([ref.plane_masks(planes, ndim, 32)], jnp.uint32)
+    perm, _, _ = ref.level_order(planes, ndim, 32)
+    perm = jnp.asarray([perm], jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, planes=planes, ndim=ndim),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_blocks, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_blocks, nwords), lambda i: (i, 0)),
+            pl.BlockSpec((tile_blocks, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, nwords), jnp.uint32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xb, masks, perm)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("planes", "ndim", "tile_blocks", "interpret")
+)
+def decode_pallas(
+    payload: jax.Array,
+    emax: jax.Array,
+    *,
+    planes: int,
+    ndim: int,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
+    interpret: bool = True,
+):
+    """Inverse of encode_pallas. Returns (nb, 4^ndim) f32."""
+    nb, nwords = payload.shape
+    assert nwords == ref.payload_words(ndim, planes)
+    assert nb % tile_blocks == 0, (nb, tile_blocks)
+    n = ref.block_size(ndim)
+    grid = (nb // tile_blocks,)
+    _, inv, _ = ref.level_order(planes, ndim, 32)
+    inv = jnp.asarray([inv], jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, planes=planes, ndim=ndim),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_blocks, nwords), lambda i: (i, 0)),
+            pl.BlockSpec((tile_blocks, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_blocks, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, n), jnp.float32),
+        interpret=interpret,
+    )(payload, emax, inv)

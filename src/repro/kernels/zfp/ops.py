@@ -1,0 +1,89 @@
+"""jit'd public wrappers around the ZFP-style codec.
+
+``backend="ref"`` runs the pure-jnp oracle (XLA-compiled; fastest on this
+CPU-only container and the numerics ground truth). ``backend="pallas"``
+runs the Pallas TPU kernel — in interpret mode here, compiled Mosaic on
+real TPUs. Both produce bit-identical results (tests/test_zfp_kernel.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+from .ref import Compressed
+
+Backend = Literal["ref", "pallas"]
+
+
+def _pad_blocks(xb: jax.Array, tile: int) -> jax.Array:
+    nb = xb.shape[0]
+    pad = (-nb) % tile
+    if pad:
+        xb = jnp.pad(xb, ((0, pad), (0, 0)))
+    return xb
+
+
+@functools.partial(
+    jax.jit, static_argnames=("planes", "ndim", "backend", "interpret")
+)
+def compress(
+    x: jax.Array,
+    *,
+    planes: int,
+    ndim: int = 3,
+    backend: Backend = "ref",
+    interpret: bool = True,
+) -> Compressed:
+    """Fixed-rate compress the trailing ``ndim`` axes of ``x``."""
+    xb = ref.blockify(x, ndim)
+    nb = xb.shape[0]
+    if backend == "pallas" and x.dtype == jnp.float32:
+        tile = min(kernel.DEFAULT_TILE_BLOCKS, nb)
+        xbp = _pad_blocks(xb, tile)
+        payload, emax = kernel.encode_pallas(
+            xbp, planes=planes, ndim=ndim, tile_blocks=tile,
+            interpret=interpret,
+        )
+        payload, emax = payload[:nb], emax[:nb, 0]
+    else:
+        payload, emax = ref.encode_blocks(xb, planes, ndim)
+    return Compressed(payload, emax, tuple(x.shape), planes, ndim, str(x.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def decompress(
+    c: Compressed, *, backend: Backend = "ref", interpret: bool = True
+) -> jax.Array:
+    dtype = jnp.dtype(c.dtype)
+    if backend == "pallas" and dtype == jnp.float32:
+        nb = c.payload.shape[0]
+        tile = min(kernel.DEFAULT_TILE_BLOCKS, nb)
+        pad = (-nb) % tile
+        payload = jnp.pad(c.payload, ((0, pad), (0, 0)))
+        emax = jnp.pad(c.emax, (0, pad))[:, None]
+        xb = kernel.decode_pallas(
+            payload, emax, planes=c.planes, ndim=c.ndim_spatial,
+            tile_blocks=tile, interpret=interpret,
+        )[:nb]
+    else:
+        xb = ref.decode_blocks(c.payload, c.emax, c.planes, c.ndim_spatial, dtype)
+    return ref.unblockify(xb, c.shape, c.ndim_spatial)
+
+
+@functools.partial(jax.jit, static_argnames=("planes", "ndim"))
+def quantize(x: jax.Array, *, planes: int, ndim: int = 3) -> jax.Array:
+    """Numerics of compress->decompress without materialising payload.
+
+    Used where only the *precision effect* of on-the-fly compression
+    matters (long precision-loss sweeps, compressed-remat numerics).
+    """
+    return ref.quantize(x, planes, ndim)
+
+
+def compressed_nbytes(c: Compressed) -> int:
+    return c.nbytes()

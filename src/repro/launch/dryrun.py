@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at
+first init, and the production meshes need 512 placeholder host
+devices. Do not set this flag globally — smoke tests and benchmarks
+see 1 device.
+
+Per cell this script:
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. jits the cell's step with logical-rule-derived in_shardings,
+  3. ``.lower().compile()`` — any sharding mismatch / unsupported
+     collective / compile-time OOM is a bug in the framework,
+  4. records memory_analysis, cost_analysis and the HLO collective
+     totals (launch/roofline.py) to a JSON artifact for EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+      --shape train_4k [--multipod] [--rules baseline]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_supported
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as SH
+from repro.launch import roofline as RL
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+
+RULE_SETS = {
+    "baseline": SH.DEFAULT_RULES,
+    # §Perf hillclimb variants (see EXPERIMENTS.md for the log)
+    "serve_resident": {
+        # decode: weights resident (model-sharded only, no per-token
+        # FSDP all-gather); KV cache sharded over batch+seq
+        **SH.DEFAULT_RULES,
+        "p_embed": None,
+        "p_embed_alt": None,
+    },
+    "decode_kvbatch": {
+        # decode: keep cache seq unsharded (no split-K collectives),
+        # shard kv heads where divisible
+        **SH.DEFAULT_RULES,
+        "p_embed": None,
+        "cache_seq": None,
+        "cache_kv_heads": "model",
+    },
+    "train_nofsdp": {
+        **SH.DEFAULT_RULES,
+        "p_embed": None,
+    },
+    "train_smalltp": {
+        # small archs (heads < 16): give the model axis to batch too,
+        # keeping only vocab/mlp on 'model'
+        **SH.DEFAULT_RULES,
+        "heads": None,
+        "kv_heads": None,
+        "p_heads": None,
+        "p_kv_heads": None,
+    },
+}
+
+
+def arg_shardings_tree(tree):
+    return jax.tree.map(lambda s: s, tree)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    rules_name: str = "baseline",
+    out_dir: str = "experiments/dryrun",
+    cfg_override: ModelConfig | None = None,
+    tag: str = "",
+) -> dict:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = RULE_SETS[rules_name]
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "rules": rules_name, "variant": tag, "status": "ok",
+    }
+    t0 = time.time()
+    try:
+        with SH.use_rules(mesh, rules):
+            step = ST.step_for(cfg, shape)
+            in_shardings, arg_specs = ST.shardings_for(
+                cfg, shape, mesh, rules
+            )
+            with mesh:
+                jitted = jax.jit(
+                    step,
+                    in_shardings=in_shardings,
+                    donate_argnums=ST.donate_argnums_for(shape),
+                )
+                lowered = jitted.lower(*arg_specs)
+                compiled = lowered.compile()
+        record["lower_compile_s"] = round(time.time() - t0, 1)
+        # --- memory ---
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            ):
+                if hasattr(ma, k):
+                    mem[k] = int(getattr(ma, k))
+        except Exception:
+            pass
+        # fallback/extra: per-device argument bytes from shardings
+        arg_bytes = 0
+        for sh_leaf, spec_leaf in zip(
+            jax.tree.leaves(in_shardings), jax.tree.leaves(arg_specs)
+        ):
+            local = sh_leaf.shard_shape(spec_leaf.shape)
+            arg_bytes += int(np.prod(local)) * spec_leaf.dtype.itemsize
+        mem["arg_bytes_per_device"] = arg_bytes
+        record["memory"] = mem
+        # --- cost: raw XLA numbers (NOTE: while bodies counted once)
+        cost = compiled.cost_analysis() or {}
+        record["cost_analysis_raw"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        }
+        # --- trip-count-aware HLO parse (flops, HBM proxy, collectives)
+        hlo = compiled.as_text()
+        record["hlo_chars"] = len(hlo)
+        colls, hlocost = RL.parse_hlo(hlo, default_trip=cfg.num_layers)
+        totals = {c.kind: c.bytes * c.count for c in colls}
+        record["collectives"] = totals
+        record["hlo_costs"] = {
+            "dot_flops": hlocost.dot_flops,
+            "buffer_bytes": hlocost.buffer_bytes,
+        }
+        coll_bytes = sum(totals.values())
+        roof = RL.Roofline(
+            flops_per_device=max(
+                hlocost.dot_flops, float(cost.get("flops", 0.0))
+            ),
+            hbm_bytes_per_device=max(
+                hlocost.buffer_bytes,
+                float(cost.get("bytes accessed", 0.0)),
+            ),
+            collective_bytes_per_device=coll_bytes,
+            model_flops=RL.model_flops_for(cfg, shape),
+            chips=int(np.prod(list(mesh.shape.values()))),
+        )
+        record["roofline"] = roof.as_dict()
+    except Exception as e:  # record failures as artifacts, not crashes
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{record['mesh']}__{rules_name}{tag}"
+    (out / f"{fname}.json").write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--rules", default="baseline", choices=list(RULE_SETS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--kv-planes", type=int, default=0,
+                    help="fixed-rate compressed KV cache (decode cells)")
+    ap.add_argument("--remat", default="",
+                    help="override remat policy (none|dots|full)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                if not shape_supported(arch, shape):
+                    continue
+                cells.append((arch, shape, False))
+                cells.append((arch, shape, True))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, args.multipod)]
+
+    failures = 0
+    for arch, shape, mp in cells:
+        if not shape_supported(arch, shape):
+            print(f"SKIP {arch} x {shape} (long-context policy)")
+            continue
+        cfg_override = None
+        tag = ""
+        if args.kv_planes or args.remat:
+            import dataclasses
+
+            cfg_override = get_config(arch)
+            if args.kv_planes:
+                cfg_override = dataclasses.replace(
+                    cfg_override, kv_compress_planes=args.kv_planes
+                )
+                tag += f"__kv{args.kv_planes}"
+            if args.remat:
+                cfg_override = dataclasses.replace(
+                    cfg_override, remat=args.remat
+                )
+                tag += f"__remat-{args.remat}"
+        rec = run_cell(arch, shape, mp, args.rules, args.out,
+                       cfg_override=cfg_override, tag=tag)
+        status = rec["status"]
+        if status != "ok":
+            failures += 1
+            print(f"FAIL {arch} x {shape} x {rec['mesh']}: "
+                  f"{rec.get('error', '')[:200]}")
+        else:
+            r = rec["roofline"]
+            print(
+                f"OK   {arch:>22s} x {shape:>11s} x {rec['mesh']:>7s} "
+                f"compile={rec['lower_compile_s']:6.1f}s "
+                f"comp={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+                f"coll={r['collective_s']:.3e}s dom={r['dominant']}"
+            )
+            if not args.all:  # single cell: full analyses to stdout
+                print("memory_analysis:",
+                      json.dumps(rec["memory"], indent=1))
+                print("cost_analysis:",
+                      json.dumps(rec["cost_analysis_raw"], indent=1))
+                print("hlo-derived (trip-count-aware):",
+                      json.dumps(rec["hlo_costs"], indent=1))
+                print("collective bytes/device:",
+                      json.dumps(rec["collectives"], indent=1))
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — required by the dry-run's placeholder-device
+bootstrap (launch/dryrun.py sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for_devices(n: int, model_parallel: int = 1):
+    """Elastic variant: whatever devices exist, e.g. tests/examples."""
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

@@ -1,0 +1,192 @@
+"""jit-able train/prefill/decode steps + ShapeDtypeStruct input specs.
+
+These are the functions the dry-run lowers and the launchers execute.
+``input_specs`` returns weak-type-correct ShapeDtypeStructs (no device
+allocation) for every (architecture x shape) cell.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed import sharding as SH
+from repro.models import model as M
+from repro.optim import adamw, schedule
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _positions_spec(cfg: ModelConfig, b: int, s: int):
+    if cfg.mrope_sections:
+        return jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _tokens_spec(cfg: ModelConfig, b: int, s: int):
+    if cfg.embeds_input:
+        return jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {
+            "tokens": _tokens_spec(cfg, b, s),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "positions": _positions_spec(cfg, b, s),
+        }
+    if shape.kind == "prefill":
+        return {
+            "tokens": _tokens_spec(cfg, b, s),
+            "positions": _positions_spec(cfg, b, s),
+        }
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": _tokens_spec(cfg, b, 1),
+        "positions": _positions_spec(cfg, b, 1),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, max_len=shape.seq_len)
+    )
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: ShapeSpec):
+    tok = ("batch", "seq", "embed") if cfg.embeds_input else ("batch", "seq")
+    pos = (None, "batch", "seq") if cfg.mrope_sections else ("batch", "seq")
+    if shape.kind == "train":
+        return {"tokens": tok, "labels": ("batch", "seq"), "positions": pos}
+    if shape.kind == "prefill":
+        return {"tokens": tok, "positions": pos}
+    return {"tokens": tok, "positions": pos}
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4,
+                    warmup: int = 200, total_steps: int = 10_000):
+    def train_step(params, opt_state: adamw.AdamWState, batch):
+        lr = schedule.warmup_cosine(
+            opt_state.step, peak_lr=peak_lr, warmup=warmup,
+            total=total_steps,
+        )
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch)
+        )(params)
+        if cfg.grad_compress_planes:
+            from repro.distributed import collectives
+
+            grads, opt_state = collectives.compress_grads(
+                grads, opt_state, planes=cfg.grad_compress_planes
+            )
+        new_params, new_state, gnorm = adamw.update(
+            grads, opt_state, params, lr=lr
+        )
+        return new_params, new_state, {
+            "loss": loss, "gnorm": gnorm, "lr": lr
+        }
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, cache = M.prefill(
+            cfg, params, batch["tokens"], batch["positions"]
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, batch):
+        # cache is a separate (donated) argument: decoding must update
+        # the KV/SSM cache in place, never copy it (it dominates HBM).
+        logits, cache = M.decode_step(
+            cfg, params, cache, batch["tokens"], batch["positions"]
+        )
+        return logits, cache
+
+    return decode_step
+
+
+def step_for(cfg: ModelConfig, shape: ShapeSpec):
+    if shape.kind == "train":
+        return make_train_step(cfg)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_decode_step(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees for jit
+# ---------------------------------------------------------------------------
+
+
+def shardings_for(cfg: ModelConfig, shape: ShapeSpec, mesh, rules):
+    """Returns (in_shardings tuple matching step args, arg specs)."""
+    specs = input_specs(cfg, shape)
+    batch_axes = batch_logical_axes(cfg, shape)
+    batch_shardings = SH.named_sharding_tree(
+        batch_axes, specs, mesh, rules
+    )
+    param_axes = M.param_logical_axes(cfg)
+    param_specs = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    param_shardings = SH.named_sharding_tree(
+        param_axes, param_specs, mesh, rules
+    )
+    if shape.kind == "train":
+        opt_axes = adamw.state_logical_axes(param_axes)
+        opt_specs = jax.eval_shape(
+            lambda: adamw.init(param_specs_to_zeros(param_specs))
+        )
+        opt_shardings = SH.named_sharding_tree(opt_axes, opt_specs, mesh, rules)
+        return (
+            (param_shardings, opt_shardings, batch_shardings),
+            (param_specs, opt_specs, specs),
+        )
+    if shape.kind == "decode":
+        c_specs = cache_specs(cfg, shape)
+        c_shardings = SH.named_sharding_tree(
+            M.cache_logical_axes(cfg), c_specs, mesh, rules
+        )
+        return (
+            (param_shardings, c_shardings, batch_shardings),
+            (param_specs, c_specs, specs),
+        )
+    return (
+        (param_shardings, batch_shardings),
+        (param_specs, specs),
+    )
+
+
+def donate_argnums_for(shape: ShapeSpec):
+    """train: donate params+opt; decode: donate the cache."""
+    if shape.kind == "train":
+        return (0, 1)
+    if shape.kind == "decode":
+        return (1,)
+    return ()
+
+
+def param_specs_to_zeros(param_specs):
+    """eval_shape helper: build SDS-compatible zeros lazily (abstract)."""
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), param_specs
+    )

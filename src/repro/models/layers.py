@@ -1,0 +1,205 @@
+"""Shared neural layers: norms, RoPE/M-RoPE, blocked attention, GLU.
+
+Attention is implemented flash-style (online-softmax over KV chunks via
+lax.scan) so that 32k-token prefill never materialises an S x S score
+matrix — required for the dry-run memory analysis to be meaningful and
+for real TPU execution to be HBM-sane. GQA is handled by reshaping query
+heads into (kv_heads, q_per_kv).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import logical
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x, scale, eps, kind: str):
+    return rms_norm(x, scale, eps) if kind == "rmsnorm" else layer_norm(
+        x, scale, eps
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float,
+               mrope_sections: Tuple[int, ...] = ()):
+    """x: (B, S, H, D). positions: (B, S) int32 or (3, B, S) for M-RoPE
+    (temporal/height/width position streams, qwen2-vl §2.1)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (d/2,)
+    if mrope_sections:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        secs = []
+        start = 0
+        for si, sec in enumerate(mrope_sections):
+            secs.append(
+                positions[si][:, :, None].astype(jnp.float32)
+                * inv[start : start + sec]
+            )
+            start += sec
+        ang = jnp.concatenate(secs, axis=-1)  # (B, S, d/2)
+    else:
+        ang = positions[:, :, None].astype(jnp.float32) * inv  # (B,S,d/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked causal attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_logits(q, k):
+    # q: (B, S, KVH, QPK, D)  k: (B, T, KVH, D) -> (B, KVH, QPK, S, T)
+    # bf16 multiply, f32 accumulate: never materialises an f32 copy of
+    # K (the MXU-native mixed-precision contract; an .astype(f32) here
+    # costs 3x HBM traffic on the decode KV cache — measured).
+    return jnp.einsum(
+        "bsgqd,btgd->bgqst", q, k, preferred_element_type=jnp.float32
+    )
+
+
+def blocked_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KVH, D)
+    v: jax.Array,
+    *,
+    kv_chunk: int,
+    causal: bool = True,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; O(S * chunk) memory."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qpk = h // kvh
+    scale = jnp.asarray(1.0 / np.sqrt(d), q.dtype)
+    qr = q.reshape(b, s, kvh, qpk, d) * scale
+    nchunk = -(-s // kv_chunk)
+    pad = nchunk * kv_chunk - s
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = kp.reshape(b, nchunk, kv_chunk, kvh, d)
+    vc = vp.reshape(b, nchunk, kv_chunk, kvh, d)
+    qpos = jnp.arange(s)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kblk, vblk = inp
+        logits = _gqa_logits(qr, kblk)
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        mask = kpos[None, :] <= qpos[:, None] if causal else (
+            kpos[None, :] < s
+        )
+        mask = mask & (kpos[None, :] < s)
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum(
+            "bgqst,btgd->bgqsd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, qpk, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, qpk, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, qpk, s, d), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        body,
+        (m0, l0, a0),
+        (jnp.arange(nchunk), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+    )
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, h, d)
+    return out
+
+
+def batched_cache_update(cache: jax.Array, new: jax.Array,
+                         idx: jax.Array) -> jax.Array:
+    """Write new (B, 1, KVH, D) into cache (B, Smax, KVH, D) at
+    per-batch position idx (B,) — per-slot continuous batching."""
+    return jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0))
+    )(cache, new.astype(cache.dtype), idx)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, Smax, KVH, D)
+    v_cache: jax.Array,
+    length: jax.Array,  # (B,) per-slot fill (new token already in)
+) -> jax.Array:
+    b, _, h, d = q.shape
+    kvh = k_cache.shape[2]
+    qpk = h // kvh
+    scale = jnp.asarray(1.0 / np.sqrt(d), q.dtype)
+    qr = q.reshape(b, kvh, qpk, d) * scale
+    logits = jnp.einsum(
+        "bgqd,btgd->bgqt", qr, k_cache,
+        preferred_element_type=jnp.float32,
+    )
+    mask = jnp.arange(k_cache.shape[1])[None, :] < length[:, None]
+    logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bgqt,btgd->bgqd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GLU MLP
+# ---------------------------------------------------------------------------
+
+
+def glu_mlp(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = logical(h, "batch", "seq", "mlp")
+    return h @ w_down

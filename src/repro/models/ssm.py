@@ -1,0 +1,303 @@
+"""Selective state-space mixers: Mamba-1 (falcon-mamba) and Mamba-2/SSD
+(zamba2), with chunked scans.
+
+The recurrence h_t = a_t * h_{t-1} + b_t is evaluated as an outer
+``lax.scan`` over sequence chunks carrying the state, with a log-depth
+``lax.associative_scan`` inside each chunk — memory is
+O(B * chunk * d_inner * N) instead of O(B * S * d_inner * N), which is
+what makes 32k prefill and 500k contexts lowerable (the same reasoning
+as the paper's temporal blocking: bounded working set, streamed state).
+
+Simplification vs the reference CUDA kernels (noted in DESIGN.md):
+the Mamba-2 short conv is applied to x only (not [x, B, C]); parameter
+shapes and FLOP structure are otherwise faithful.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chunked_linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+                        chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + b_t along axis 1. a, b: (B, S, ...);
+    h0: (B, ...). Returns (h (B,S,...), h_last)."""
+    a = jnp.broadcast_to(a, jnp.broadcast_shapes(a.shape, b.shape))
+    bsz, s = a.shape[0], a.shape[1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        ap = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                     constant_values=1)
+        bp = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    else:
+        ap, bp = a, b
+    ac = jnp.moveaxis(
+        ap.reshape((bsz, nc, chunk) + ap.shape[2:]), 1, 0
+    )
+    bc = jnp.moveaxis(
+        bp.reshape((bsz, nc, chunk) + bp.shape[2:]), 1, 0
+    )
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def outer(h, inp):
+        a_k, b_k = inp  # (B, chunk, ...)
+        acum, bcum = lax.associative_scan(combine, (a_k, b_k), axis=1)
+        h_chunk = acum * h[:, None] + bcum
+        return h_chunk[:, -1], h_chunk
+
+    h_last, hs = lax.scan(outer, h0, (ac, bc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape((bsz, nc * chunk) + a.shape[2:])
+    return hs[:, :s], h_last
+
+
+def chunked_selective_scan(
+    dt: jax.Array,  # (B, S, D) f32 — per-channel step sizes
+    a: jax.Array,  # (D, N) f32 — negative decay rates
+    b_in: jax.Array,  # (B, S, N) f32
+    c_in: jax.Array,  # (B, S, N) f32
+    x: jax.Array,  # (B, S, D) f32
+    h0: jax.Array,  # (B, D, N) f32
+    chunk: int,
+):
+    """Mamba-1 selective scan, chunk-local memory.
+
+    §Perf iteration (EXPERIMENTS.md): the naive formulation
+    materialises decay/input tensors of shape (B, S, D, N) — 34 TB/dev
+    for falcon-mamba train_4k. Here the (B, c, D, N) tensors exist only
+    inside the chunk loop; HBM traffic per layer drops to the
+    activations themselves.
+
+    Returns (y (B,S,D) f32 where y = sum_n C_n h_n, h_last).
+    """
+    bsz, s, d = x.shape
+    n = a.shape[1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+
+    def pad_c(t):
+        return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+
+    def split(t):
+        return jnp.moveaxis(
+            pad_c(t).reshape((bsz, nc, chunk) + t.shape[2:]), 1, 0
+        )
+
+    def body(h, inp):
+        dt_c, b_c, c_c, x_c = inp  # (B, c, ...)
+        decay = jnp.exp(dt_c[..., None] * a)  # (B, c, D, N)
+        inp_c = dt_c[..., None] * b_c[:, :, None, :] * x_c[..., None]
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        acum, bcum = lax.associative_scan(comb, (decay, inp_c), axis=1)
+        h_chunk = acum * h[:, None] + bcum  # (B, c, D, N)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_chunk, c_c)
+        return h_chunk[:, -1], y_c
+
+    h_last, ys = lax.scan(
+        body, h0, (split(dt), split(b_in), split(c_in), split(x))
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * chunk, d)[:, :s]
+    return y, h_last
+
+
+def ssd_chunked(
+    dt: jax.Array,  # (B, S, H) f32
+    a: jax.Array,  # (H,) f32 negative decay rates
+    b_in: jax.Array,  # (B, S, G, N) f32
+    c_in: jax.Array,  # (B, S, G, N) f32
+    x: jax.Array,  # (B, S, H, P) f32
+    h0: jax.Array,  # (B, H, P, N) f32
+    chunk: int,
+):
+    """Mamba-2 / SSD in the chunked *matmul* formulation (Dao & Gu,
+    arXiv:2405.21060 §6) — the TPU-native form.
+
+    §Perf iteration: replaces the diagonal-recurrence form whose
+    (B, S, H, P, N) inputs cost 60 TB/dev on zamba2 train_4k. Here the
+    only intermediates are (B, H, c, c) Gram matrices and the
+    (B, H, P, N) chunk-boundary states; everything is MXU matmuls.
+
+    Returns (y (B,S,H,P), h_last).
+    """
+    bsz, s, h = dt.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    p = x.shape[3]
+    rep = h // g
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+
+    def split(t):
+        tp = jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        return jnp.moveaxis(
+            tp.reshape((bsz, nc, chunk) + t.shape[2:]), 1, 0
+        )
+
+    def body(hst, inp):
+        dt_c, b_c, c_c, x_c = inp
+        # per-head log-decay cumulative within the chunk
+        la = dt_c * a  # (B, c, H) log decay per step (negative)
+        cum = jnp.cumsum(la, axis=1)  # (B, c, H) inclusive
+        bh = jnp.repeat(b_c, rep, axis=2)  # (B, c, H, N)
+        ch = jnp.repeat(c_c, rep, axis=2)
+        # intra-chunk: Y[i] += sum_{j<=i} C_i B_j^T decay(j..i) dt_j x_j
+        gram = jnp.einsum("bihn,bjhn->bhij", ch, bh)  # (B,H,c,c)
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,i,j,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay_ij = jnp.where(
+            mask[None, :, :, None], jnp.exp(ldiff), 0.0
+        )  # (B, i, j, H)
+        w = gram * jnp.moveaxis(decay_ij, 3, 1)  # (B,H,i,j)
+        xdt = x_c * dt_c[..., None]  # (B, c, H, P)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", w, xdt)
+        # inter-chunk: contribution of the carried state
+        dec_to = jnp.exp(cum)  # decay from chunk start to i (inclusive)
+        y_inter = jnp.einsum(
+            "bihn,bhpn,bih->bihp", ch, hst, dec_to
+        )
+        # state update: h' = decay_total * h + sum_j decay(j..end) ...
+        dec_from = jnp.exp(cum[:, -1:, :] - cum)  # (B, c, H) j..end
+        hst_new = (
+            jnp.exp(cum[:, -1])[..., None, None] * hst
+            + jnp.einsum("bjhp,bjhn,bjh->bhpn", xdt, bh, dec_from)
+        )
+        return hst_new, y_intra + y_inter
+    h_last, ys = lax.scan(
+        body, h0, (split(dt), split(b_in), split(c_in), split(x))
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * chunk, h, p)[:, :s]
+    return y, h_last
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x: (B, S, D), w: (D, K)."""
+    k = w.shape[1]
+    out = x * w[None, None, :, k - 1]
+    for j in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[None, None, :, k - 1 - j]
+    return out + b[None, None, :]
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, K-1, D_in) trailing inputs
+    h: jax.Array  # (B, D_in, N) f32  (mamba2: (B, H, P, N))
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+
+
+def mamba1_seq(p, x, *, chunk: int, state: MambaState | None = None):
+    """x: (B, S, d) -> (y (B, S, d), new MambaState)."""
+    bsz, s, _ = x.shape
+    di = p["conv_w"].shape[0]
+    n = p["A_log"].shape[1]
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if state is not None:
+        hist = jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)
+        conv_in = hist[:, -(s + p["conv_w"].shape[1] - 1):]
+        xi_c = causal_conv(conv_in, p["conv_w"], p["conv_b"])[
+            :, -s:
+        ]
+        new_conv = hist[:, -(p["conv_w"].shape[1] - 1):]
+    else:
+        xi_c = causal_conv(xi, p["conv_w"], p["conv_b"])
+        new_conv = xi[:, -(p["conv_w"].shape[1] - 1):]
+    xi_c = jax.nn.silu(xi_c)
+    proj = xi_c @ p["x_proj"]
+    dtr = p["dt_w"].shape[0]
+    dt_in, bc = proj[..., :dtr], proj[..., dtr:]
+    b_in, c_in = jnp.split(bc, 2, axis=-1)  # (B,S,N)
+    dt = jax.nn.softplus(dt_in @ p["dt_w"] + p["dt_b"])  # (B,S,di)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di,N)
+    h0 = state.h if state is not None else jnp.zeros(
+        (bsz, di, n), jnp.float32
+    )
+    y, h_last = chunked_selective_scan(
+        dt.astype(jnp.float32), a,
+        b_in.astype(jnp.float32), c_in.astype(jnp.float32),
+        xi_c.astype(jnp.float32), h0, min(chunk, s),
+    )
+    y = y + p["D"].astype(jnp.float32) * xi_c.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"], MambaState(new_conv, h_last)
+
+
+def mamba1_init_state(p, bsz: int, dtype) -> MambaState:
+    di, n = p["A_log"].shape
+    k = p["conv_w"].shape[1]
+    return MambaState(
+        conv=jnp.zeros((bsz, k - 1, di), dtype),
+        h=jnp.zeros((bsz, di, n), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_seq(p, x, *, chunk: int, ngroups: int, ssm_state: int,
+               state: MambaState | None = None):
+    """Scalar-decay-per-head SSD. x: (B, S, d)."""
+    bsz, s, _ = x.shape
+    nheads = p["A_log"].shape[0]
+    di = p["conv_w"].shape[0]
+    hp = di // nheads
+    g, n = ngroups, ssm_state
+    zxbcdt = x @ p["in_proj"]
+    z, xi, bc, dt_in = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + 2 * g * n], axis=-1
+    )
+    if state is not None:
+        hist = jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)
+        conv_in = hist[:, -(s + p["conv_w"].shape[1] - 1):]
+        xi = causal_conv(conv_in, p["conv_w"], p["conv_b"])[:, -s:]
+        new_conv = hist[:, -(p["conv_w"].shape[1] - 1):]
+    else:
+        new_conv = xi[:, -(p["conv_w"].shape[1] - 1):]
+        xi = causal_conv(xi, p["conv_w"], p["conv_b"])
+    xi = jax.nn.silu(xi)
+    b_in, c_in = jnp.split(bc, 2, axis=-1)  # (B,S,G*N)
+    b_in = b_in.reshape(bsz, s, g, n)
+    c_in = c_in.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt_in + p["dt_b"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    xh = xi.reshape(bsz, s, nheads, hp).astype(jnp.float32)
+    h0 = state.h if state is not None else jnp.zeros(
+        (bsz, nheads, hp, n), jnp.float32
+    )
+    y, h_last = ssd_chunked(
+        dt.astype(jnp.float32), a,
+        b_in.astype(jnp.float32), c_in.astype(jnp.float32),
+        xh, h0, min(chunk, s),
+    )
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(bsz, s, di).astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], MambaState(new_conv, h_last)
+
+
+def mamba2_init_state(p, bsz: int, dtype, ssm_state: int) -> MambaState:
+    nheads = p["A_log"].shape[0]
+    di, k = p["conv_w"].shape
+    hp = di // nheads
+    return MambaState(
+        conv=jnp.zeros((bsz, k - 1, di), dtype),
+        h=jnp.zeros((bsz, nheads, hp, ssm_state), jnp.float32),
+    )

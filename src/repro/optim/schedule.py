@@ -1,0 +1,16 @@
+"""LR schedule: linear warmup + cosine decay (the production default)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  floor_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, s / max(warmup, 1))
+    t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (
+        floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    )
+    return jnp.where(s < warmup, warm, cos)

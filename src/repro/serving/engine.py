@@ -1,0 +1,129 @@
+"""Batched serving engine with continuous batching + compressed KV.
+
+A production-shaped (single-host) decode loop:
+  * fixed slot count; new requests prefill into a free slot while other
+    slots keep decoding (continuous batching),
+  * per-slot KV cache; optionally the fixed-rate compressed cache of
+    ``repro.models.kvcache`` (the paper's technique at the decode
+    memory boundary: 2-4x more concurrent context per byte of HBM),
+  * greedy or temperature sampling, deterministic under a seed.
+
+The multi-chip version shards slots over ('pod','data') and heads/seq
+over 'model' — the same logical rules as the dry-run serve cells; this
+class is the host-side control loop around `decode_step`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        slots: int = 4,
+        max_len: int = 256,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.cfg, self.params = cfg, params
+        self.slots = slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.rng = np.random.default_rng(seed)
+        self.cache = M.init_cache(cfg, slots, max_len)
+        self.active: Dict[int, Optional[Request]] = {
+            i: None for i in range(slots)
+        }
+        self.pending: List[Request] = []
+        self.pos = np.zeros(slots, np.int32)
+        self._rid = 0
+        self._step = jax.jit(
+            lambda p, c, t, ps: M.decode_step(cfg, p, c, t, ps)
+        )
+
+    def submit(self, prompt: List[int], max_new: int = 16) -> int:
+        self._rid += 1
+        self.pending.append(Request(self._rid, list(prompt), max_new))
+        return self._rid
+
+    def _admit(self) -> None:
+        for slot, req in self.active.items():
+            if req is None and self.pending:
+                self.active[slot] = self.pending.pop(0)
+                self.pos[slot] = 0
+
+    def step(self) -> Dict[int, List[int]]:
+        """One engine iteration: feed each active slot one token
+        (prompt token while prefilling, else the model's own sample).
+        Slot-synchronous decode — the standard continuous-batching
+        inner loop."""
+        self._admit()
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for slot, req in self.active.items():
+            if req is None:
+                continue
+            p = self.pos[slot]
+            if p < len(req.prompt):
+                tokens[slot, 0] = req.prompt[p]
+            elif req.out:
+                tokens[slot, 0] = req.out[-1]
+        positions = self.pos[:, None].astype(np.int32)
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(positions),
+        )
+        logits = np.asarray(logits, np.float32)
+        finished: Dict[int, List[int]] = {}
+        for slot, req in list(self.active.items()):
+            if req is None:
+                continue
+            self.pos[slot] += 1
+            if self.pos[slot] < len(req.prompt):
+                continue  # still prefilling
+            if self.temperature > 0:
+                z = logits[slot] / self.temperature
+                z = z - z.max()
+                prob = np.exp(z) / np.exp(z).sum()
+                tok = int(self.rng.choice(len(prob), p=prob))
+            else:
+                tok = int(logits[slot].argmax())
+            req.out.append(tok)
+            if (
+                len(req.out) >= req.max_new
+                or self.pos[slot] >= self.max_len - 1
+            ):
+                req.done = True
+                finished[req.rid] = req.out
+                self.active[slot] = None
+        return finished
+
+    def run_all(self, max_iters: int = 10_000) -> Dict[int, List[int]]:
+        done: Dict[int, List[int]] = {}
+        it = 0
+        while (self.pending or any(self.active.values())) and (
+            it < max_iters
+        ):
+            done.update(self.step())
+            it += 1
+        return done

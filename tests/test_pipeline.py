@@ -1,0 +1,101 @@
+"""Pipeline DES: reproduces paper Fig. 5/6 structure and validates the
+beyond-paper overlap schedule."""
+
+import pytest
+
+from repro.core.outofcore import OOCConfig, paper_code_fields
+from repro.core.pipeline import (
+    TPU_V5E_HOST,
+    V100_PCIE,
+    build_sweep_tasks,
+    simulate,
+    sweep_timeline,
+)
+
+SHAPE = (1152, 1152, 1152)  # paper Table I
+
+
+def _cfg(code):
+    return OOCConfig(
+        SHAPE, 8, 12, paper_code_fields(code, f32=False), dtype="float64"
+    )
+
+
+def _speedup(code, sched="paper", sweeps=4):
+    base = sweep_timeline(_cfg(1), V100_PCIE, sweeps=sweeps).makespan
+    t = sweep_timeline(
+        _cfg(code), V100_PCIE, sweeps=sweeps, schedule=sched
+    ).makespan
+    return base / t
+
+
+def test_paper_fig5_speedups():
+    """Paper: 1.16x (RW), 1.18x (RO), 1.20x (RW+RO). Model within 5%."""
+    assert _speedup(2) == pytest.approx(1.16, rel=0.05)
+    assert _speedup(3) == pytest.approx(1.18, rel=0.05)
+    assert _speedup(4) == pytest.approx(1.20, rel=0.05)
+
+
+def test_paper_fig6_bounding_flip():
+    """Codes 1-3 are transfer-bound; code 4 flips to compute-bound."""
+    for code in (1, 2, 3):
+        tl = sweep_timeline(_cfg(code), V100_PCIE, sweeps=1)
+        assert tl.bounding_resource() == "h2d", code
+    tl = sweep_timeline(_cfg(4), V100_PCIE, sweeps=1)
+    assert tl.bounding_resource() == "compute"
+
+
+def test_overlap_schedule_never_slower():
+    for code in (1, 2, 3, 4):
+        paper = sweep_timeline(
+            _cfg(code), V100_PCIE, sweeps=2, schedule="paper"
+        ).makespan
+        fused = sweep_timeline(
+            _cfg(code), V100_PCIE, sweeps=2, schedule="overlap"
+        ).makespan
+        assert fused <= paper + 1e-9, code
+
+
+def test_compression_reduces_wire_time():
+    t1 = sweep_timeline(_cfg(1), V100_PCIE, sweeps=1)
+    t4 = sweep_timeline(_cfg(4), V100_PCIE, sweeps=1)
+    assert t4.busy()["h2d"] < t1.busy()["h2d"]
+
+
+def test_straggler_injection():
+    tasks = build_sweep_tasks(_cfg(1), sweeps=1)
+    base = simulate(tasks, V100_PCIE).makespan
+    slow = simulate(tasks, V100_PCIE, straggler={"s0b3.h2d": 4.0}).makespan
+    assert slow > base
+
+
+def test_tpu_projection_bottleneck_moves_with_bt():
+    """Hardware-adaptation finding (DESIGN.md §2 / EXPERIMENTS §Perf):
+    on the v5e host link the f32 run at the paper's bt=12 is already
+    compute-bound (faster link + temporal-blocking halo recompute), so
+    compression buys nothing end-to-end — but at bt=4 (3x the
+    transfers per step, less recompute) the paper's transfer bound
+    reappears and compression wins again."""
+    big = OOCConfig(SHAPE, 8, 12, paper_code_fields(1), dtype="float32")
+    assert sweep_timeline(big, TPU_V5E_HOST).bounding_resource() == "compute"
+    small = OOCConfig(SHAPE, 8, 4, paper_code_fields(1), dtype="float32")
+    assert sweep_timeline(small, TPU_V5E_HOST).bounding_resource() == "h2d"
+    # per 12 time steps: 3 sweeps at bt=4; the TPU codec is the fused
+    # Pallas kernel (overlap schedule) — no cuZFP per-call sync.
+    small4 = OOCConfig(SHAPE, 8, 4, paper_code_fields(4), dtype="float32")
+    t_unc = sweep_timeline(
+        small, TPU_V5E_HOST, sweeps=3, schedule="overlap"
+    ).makespan
+    t_cmp = sweep_timeline(
+        small4, TPU_V5E_HOST, sweeps=3, schedule="overlap"
+    ).makespan
+    assert t_cmp < t_unc
+
+
+def test_deps_respected():
+    tasks = build_sweep_tasks(_cfg(2), sweeps=1)
+    tl = simulate(tasks, V100_PCIE)
+    byid = {t.tid: t for t in tasks}
+    for t in tasks:
+        for d in t.deps:
+            assert tl.spans[d].end <= tl.spans[t.tid].start + 1e-12
