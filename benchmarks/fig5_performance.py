@@ -5,18 +5,74 @@ Timeline model at paper scale (1152^3 f64, V100/PCIe constants,
 plus the beyond-paper 'overlap' schedule and the TPU-v5e projection.
 Derived column reports speedup vs code 1. Paper measured:
 code2 1.16x, code3 1.18x, code4 1.20x.
+
+Second section: the *live* path — the async double-buffered executor
+(repro.core.executor) against the synchronous engine on a scaled
+volume, real wall-clock per sweep on this host.
 """
 
-from repro.core.outofcore import OOCConfig, paper_code_fields
+import time
+
+from repro.core.executor import AsyncExecutor
+from repro.core.outofcore import (
+    OOCConfig,
+    OutOfCoreWave,
+    paper_code_fields,
+)
 from repro.core.pipeline import TPU_V5E_HOST, V100_PCIE, sweep_timeline
+from repro.kernels.stencil import ref as stencil_ref
 
 from benchmarks.common import emit
+
+import numpy as np
 
 SHAPE = (1152, 1152, 1152)
 SWEEPS = 4  # 48 time steps; speedups are sweep-periodic
 
+LIVE_SHAPE = (96, 32, 32)
+LIVE_NDIV, LIVE_BT, LIVE_SWEEPS = 4, 2, 2
+
+
+def _run_live() -> None:
+    p_cur = np.asarray(
+        stencil_ref.ricker_source(LIVE_SHAPE), dtype=np.float32
+    )
+    p_prev = 0.95 * p_cur
+    vel2 = np.full(LIVE_SHAPE, 0.07, dtype=np.float32)
+    for code in (1, 2, 3, 4):
+        cfg = OOCConfig(
+            LIVE_SHAPE, LIVE_NDIV, LIVE_BT, paper_code_fields(code)
+        )
+        engines = {
+            "sync": OutOfCoreWave(cfg, p_prev, p_cur, vel2),
+            "live": AsyncExecutor(
+                cfg, p_prev, p_cur, vel2, schedule="depth2"
+            ),
+        }
+        times, wire = {}, {}
+        for name, eng in engines.items():
+            eng.sweep()  # warmup (jit compile)
+            pre = eng.transfer_summary()
+            t0 = time.perf_counter()
+            for _ in range(LIVE_SWEEPS):
+                eng.sweep()
+            times[name] = (time.perf_counter() - t0) / LIVE_SWEEPS
+            post = eng.transfer_summary()
+            # per-sweep wire bytes over the timed sweeps only
+            wire[name] = {
+                k: (post[k] - pre[k]) // LIVE_SWEEPS for k in post
+            }
+        emit(
+            f"fig5/live/code{code}",
+            times["live"] * 1e6,
+            f"sync_ratio={times['sync'] / times['live']:.3f}x "
+            f"h2d_wire={wire['live']['h2d_wire']} "
+            f"d2h_wire={wire['live']['d2h_wire']}",
+        )
+
 
 def run() -> None:
+    _run_live()
     base = {}
     for sched, hw, dtype, f32 in (
         ("paper", V100_PCIE, "float64", False),

@@ -22,12 +22,29 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard
+
+try:  # optional dep: only needed when (de)compressing checkpoints
+    import zstandard
+
+    HAVE_ZSTD = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    zstandard = None
+    HAVE_ZSTD = False
 
 from repro.kernels.zfp import ops as zfp_ops
 from repro.kernels.zfp.ref import Compressed
 
 _FLAT_SEP = "/"
+
+
+def _require_zstd():
+    if not HAVE_ZSTD:
+        raise ModuleNotFoundError(
+            "checkpoint compression requires the optional 'zstandard' "
+            "package — install the 'test' extra (pip install .[test]) "
+            "or zstandard directly"
+        )
+    return zstandard
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -51,13 +68,13 @@ def save(
     lossy_planes: Optional[int] = None,
     keep: int = 3,
 ) -> str:
+    cctx = _require_zstd().ZstdCompressor(level=zstd_level)
     base = pathlib.Path(directory)
     base.mkdir(parents=True, exist_ok=True)
     tmp = base / f"tmp.{step}"
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir()
-    cctx = zstandard.ZstdCompressor(level=zstd_level)
     manifest = {"step": step, "leaves": {}}
     for key, leaf in _flatten(tree).items():
         arr = np.asarray(leaf)
@@ -119,7 +136,7 @@ def restore(path: str, like_tree) -> Tuple[int, Any]:
     """Returns (step, tree of host numpy arrays shaped like like_tree)."""
     p = pathlib.Path(path)
     manifest = json.loads((p / "manifest.json").read_text())
-    dctx = zstandard.ZstdDecompressor()
+    dctx = _require_zstd().ZstdDecompressor()
     flat = _flatten(like_tree)
     out: Dict[str, np.ndarray] = {}
     for key, entry in manifest["leaves"].items():

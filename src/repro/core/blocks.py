@@ -76,6 +76,22 @@ class BlockPlan:
         out += [("C", i, self.common(i)) for i in range(self.ndiv - 1)]
         return out
 
+    def fetch_units(self, i: int) -> List[Tuple[str, int]]:
+        """Units fetched fresh for block i's visit: R_i and C_i.
+        (C_{i-1} is the on-device carry from block i-1's visit.)"""
+        out = [("R", i)]
+        if i < self.ndiv - 1:
+            out.append(("C", i))
+        return out
+
+    def writeback_units(self, i: int) -> List[Tuple[str, int]]:
+        """Units written back after block i computes: R_i and the
+        completed C_{i-1}."""
+        out = [("R", i)]
+        if i > 0:
+            out.append(("C", i - 1))
+        return out
+
     def check_cover(self) -> None:
         """Units are disjoint and cover [0, Z) exactly."""
         spans = sorted(span for _, _, span in self.units())

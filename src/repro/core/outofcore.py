@@ -1,20 +1,33 @@
-"""Out-of-core streaming engine with separate compression (paper §V).
+"""Out-of-core stencil engines with separate on-device compression.
 
-Executes the paper's workflow: a volume too large for device memory is
+The paper's workflow (§V): a volume too large for device memory is
 decomposed along Z (``BlockPlan``); blocks are streamed host->device,
 computed for ``bt`` temporally-blocked stencil steps, and streamed back
 — with each storage unit (remainder / common region) independently
-fixed-rate compressed *on device* so that only compressed payloads cross
-the host<->device boundary (the paper's on-the-fly compression), and the
-common region between contiguous blocks is fetched/written exactly once
-(the paper's separate-compression dependency fix).
+fixed-rate compressed *on device* so only compressed payloads cross the
+host<->device boundary, and the common region between contiguous blocks
+fetched/written exactly once (the separate-compression dependency fix).
 
-The engine is synchronous here (single host CPU); every fetch/compute/
-writeback is also recorded as a pipeline *task* with byte counts so that
-``repro.core.pipeline`` can replay the sweep on a 3-stream timeline with
-hardware constants (V100/PCIe for the paper-faithful reproduction, TPU
-host-DMA for the adapted projection) — that replay is what Figs. 5/6 are
-reproduced from.
+The subsystem is split across three modules:
+
+* ``repro.core.taskgraph`` — the shared representation: every sweep is
+  a graph of fetch/decompress/stencil/compress/writeback ``Task``
+  objects with dependencies, built by ``build_sweep_tasks`` under a
+  pluggable ``Schedule`` (``paper`` / ``unitgrain`` / ``depth-k``).
+* ``repro.core.executor`` — the *live* engine: walks the task graph
+  asynchronously with a double-buffered, bounded-depth in-flight window
+  (2-3 block visits resident, matching the paper's three CUDA streams),
+  overlapping H2D, codec+stencil compute, and D2H. Bit-identical
+  output to the synchronous engine below.
+* ``repro.core.pipeline`` — the timeline *replay*: the same graph on an
+  event-driven three-stream model with hardware constants (V100/PCIe
+  for the paper-faithful Figs. 5/6, TPU host-DMA for the adapted
+  projection).
+
+This module keeps the synchronous reference engine
+(``OutOfCoreWave``, one block at a time, the numerics ground truth the
+executor is verified against) and the host-side unit store
+(``HostUnitStore``) both engines share.
 
 Field roles follow paper Table I: two read-write pressure fields, a
 write-only Laplacian scratch (never transferred), and a read-only
@@ -23,7 +36,7 @@ velocity field (transferred to device, never written back).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Literal, Optional, Tuple
 
 import jax
@@ -31,10 +44,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blocks import BlockPlan
+from repro.core.taskgraph import Transfer
 from repro.kernels.stencil import ops as stencil_ops
-from repro.kernels.stencil.ref import HALO
 from repro.kernels.zfp import ops as zfp_ops
 from repro.kernels.zfp.ref import Compressed
+
+__all__ = [
+    "FieldSpec", "OOCConfig", "OutOfCoreWave", "HostUnitStore",
+    "Transfer", "paper_code_fields",
+]
 
 Role = Literal["rw", "ro"]
 
@@ -47,17 +65,6 @@ class FieldSpec:
     @property
     def compressed(self) -> bool:
         return self.planes is not None
-
-
-@dataclass
-class Transfer:
-    direction: str  # "h2d" | "d2h"
-    field: str
-    unit: Tuple[str, int]
-    raw_bytes: int
-    wire_bytes: int
-    sweep: int
-    block: int
 
 
 @dataclass
@@ -100,10 +107,16 @@ def paper_code_fields(code: int, f32: bool = True) -> Dict[str, FieldSpec]:
     raise ValueError(code)
 
 
-class _HostStore:
-    """Host-side storage of units, raw (numpy) or compressed payloads."""
+class HostUnitStore:
+    """Host-side storage of units, raw (numpy) or compressed payloads.
 
-    def __init__(self):
+    Shared by the synchronous engine and the async executor: seeding,
+    unit put/get, host->device staging, and full-field gather all live
+    here so both engines see byte-identical host state.
+    """
+
+    def __init__(self, cfg: OOCConfig):
+        self.cfg = cfg
         self._units: Dict[Tuple[str, str, int], object] = {}
 
     def put(self, field: str, kind: str, idx: int, value) -> int:
@@ -122,9 +135,68 @@ class _HostStore:
     def get(self, field: str, kind: str, idx: int):
         return self._units[(field, kind, idx)]
 
+    def seed(self, full: Dict[str, np.ndarray]) -> None:
+        """Initial decomposition of full fields into host units.
+        (In production this is the I/O layer; unit-wise so the full
+        volume never has to exist on the device.)"""
+        cfg = self.cfg
+        plan = cfg.plan
+        for name, arr in full.items():
+            spec = cfg.fields[name]
+            assert arr.shape == cfg.shape
+            units = [(kind, idx, jnp.asarray(arr[lo:hi]))
+                     for kind, idx, (lo, hi) in plan.units()]
+            if spec.compressed:
+                comp = zfp_ops.compress_units(
+                    [u for _, _, u in units], planes=spec.planes, ndim=3,
+                    backend=cfg.backend,
+                )
+                units = [(k, i, c) for (k, i, _), c in zip(units, comp)]
+            for kind, idx, unit in units:
+                self.put(name, kind, idx, unit)
+
+    def stage(self, field: str, kind: str, idx: int):
+        """Host -> device for one unit WITHOUT decompressing.
+
+        Returns ``(device_value, raw_bytes, wire_bytes)`` where
+        ``device_value`` is a device array or an on-device
+        ``Compressed`` awaiting a decompress task.
+        """
+        stored = self.get(field, kind, idx)
+        if isinstance(stored, Compressed):
+            dev = Compressed(
+                jnp.asarray(stored.payload), jnp.asarray(stored.emax),
+                stored.shape, stored.planes, stored.ndim_spatial,
+                stored.dtype,
+            )
+            raw = int(np.prod(stored.shape)) * np.dtype(stored.dtype).itemsize
+            return dev, raw, stored.nbytes()
+        return jnp.asarray(stored), stored.nbytes, stored.nbytes
+
+    def gather(self, name: str) -> np.ndarray:
+        """Reassemble a full field from host units (decompressing)."""
+        cfg = self.cfg
+        out = np.zeros(cfg.shape, dtype=cfg.dtype)
+        for kind, idx, (lo, hi) in cfg.plan.units():
+            stored = self.get(name, kind, idx)
+            if isinstance(stored, Compressed):
+                dev, _, _ = self.stage(name, kind, idx)
+                out[lo:hi] = np.asarray(
+                    zfp_ops.decompress(dev, backend=cfg.backend)
+                )
+            else:
+                out[lo:hi] = stored
+        return out
+
 
 class OutOfCoreWave:
-    """The paper's out-of-core acoustic propagator."""
+    """The paper's out-of-core acoustic propagator (synchronous).
+
+    One block visit at a time: fetch, decompress, compute, compress,
+    write back, then the next block. This is the numerics ground truth;
+    ``repro.core.executor.AsyncExecutor`` runs the same ops overlapped
+    and must stay bit-identical to it.
+    """
 
     def __init__(
         self,
@@ -136,51 +208,22 @@ class OutOfCoreWave:
         self.cfg = cfg
         self.plan = cfg.plan
         self.plan.check_cover()
-        self.store = _HostStore()
+        self.store = HostUnitStore(cfg)
         self.transfers: List[Transfer] = []
         self.sweeps_done = 0
-        self._seed_host({"p_prev": p_prev, "p_cur": p_cur, "vel2": vel2})
-
-    # ------------------------------------------------------------------
-    def _seed_host(self, full: Dict[str, np.ndarray]) -> None:
-        """Initial decomposition of full fields into host units.
-        (In production this is the I/O layer; unit-wise so the full
-        volume never has to exist on the device.)"""
-        for name, arr in full.items():
-            spec = self.cfg.fields[name]
-            assert arr.shape == self.cfg.shape
-            for kind, idx, (lo, hi) in self.plan.units():
-                unit = jnp.asarray(arr[lo:hi])
-                if spec.compressed:
-                    unit = zfp_ops.compress(
-                        unit, planes=spec.planes, ndim=3,
-                        backend=self.cfg.backend,
-                    )
-                self.store.put(name, kind, idx, unit)
+        self.store.seed({"p_prev": p_prev, "p_cur": p_cur, "vel2": vel2})
 
     # ------------------------------------------------------------------
     def _fetch_unit(self, name: str, kind: str, idx: int, sweep: int,
                     block: int) -> jax.Array:
         """Host -> device for one unit, decompressing on device."""
-        spec = self.cfg.fields[name]
-        stored = self.store.get(name, kind, idx)
-        if isinstance(stored, Compressed):
-            dev = Compressed(
-                jnp.asarray(stored.payload), jnp.asarray(stored.emax),
-                stored.shape, stored.planes, stored.ndim_spatial,
-                stored.dtype,
-            )
-            raw = int(np.prod(stored.shape)) * np.dtype(stored.dtype).itemsize
-            self.transfers.append(Transfer(
-                "h2d", name, (kind, idx), raw, stored.nbytes(), sweep, block
-            ))
-            return zfp_ops.decompress(dev, backend=self.cfg.backend)
-        arr = jnp.asarray(stored)
+        dev, raw, wire = self.store.stage(name, kind, idx)
         self.transfers.append(Transfer(
-            "h2d", name, (kind, idx), stored.nbytes, stored.nbytes, sweep,
-            block,
+            "h2d", name, (kind, idx), raw, wire, sweep, block
         ))
-        return arr
+        if isinstance(dev, Compressed):
+            return zfp_ops.decompress(dev, backend=self.cfg.backend)
+        return dev
 
     def _write_unit(self, name: str, kind: str, idx: int, value: jax.Array,
                     sweep: int, block: int) -> None:
@@ -269,22 +312,7 @@ class OutOfCoreWave:
 
     # ------------------------------------------------------------------
     def gather(self, name: str) -> np.ndarray:
-        """Reassemble a full field from host units (decompressing)."""
-        out = np.zeros(self.cfg.shape, dtype=self.cfg.dtype)
-        for kind, idx, (lo, hi) in self.plan.units():
-            stored = self.store.get(name, kind, idx)
-            if isinstance(stored, Compressed):
-                dev = Compressed(
-                    jnp.asarray(stored.payload), jnp.asarray(stored.emax),
-                    stored.shape, stored.planes, stored.ndim_spatial,
-                    stored.dtype,
-                )
-                out[lo:hi] = np.asarray(
-                    zfp_ops.decompress(dev, backend=self.cfg.backend)
-                )
-            else:
-                out[lo:hi] = stored
-        return out
+        return self.store.gather(name)
 
     # ------------------------------------------------------------------
     def transfer_summary(self) -> Dict[str, int]:

@@ -1,12 +1,14 @@
-"""Three-stream pipeline model for the out-of-core sweep (paper §V-B).
+"""Three-stream pipeline replay for the out-of-core sweep (paper §V-B).
 
 The paper overlaps H2D transfer, GPU work (decompress -> bt stencil
 steps -> compress) and D2H transfer on three CUDA streams (Fig. 4).
-This module replays a sweep's task graph on an event-driven timeline
-with per-resource FIFO streams, reproducing Fig. 5 (end-to-end time),
-Fig. 6 (per-category busy time + bounding operation) and enabling the
-schedule experiments the paper leaves as future work ("more
-sophisticated measures to orchestrate the pipelining").
+This module *replays* the shared task graph (``repro.core.taskgraph``)
+on an event-driven timeline with per-resource FIFO streams, reproducing
+Fig. 5 (end-to-end time), Fig. 6 (per-category busy time + bounding
+operation) and enabling the schedule experiments the paper leaves as
+future work ("more sophisticated measures to orchestrate the
+pipelining"). The *same* graph is executed for real by
+``repro.core.executor.AsyncExecutor``.
 
 Resources:
   * ``h2d``      host->device DMA engine
@@ -17,12 +19,9 @@ Resources:
                  overlapping")
   * ``d2h``      device->host DMA engine
 
-Schedules:
-  * ``paper``    block-granularity issue order, codec on the compute
-                 stream (the paper's modified cuZFP pipeline)
-  * ``unitgrain``beyond-paper: unit-granularity D2H issue — compressed
-                 units ship as soon as each is encoded instead of after
-                 the whole block (see EXPERIMENTS.md §Perf)
+Schedules (see ``repro.core.taskgraph.Schedule``): ``paper``,
+``unitgrain`` (alias ``overlap``), and the windowed ``depth-k``
+prefetch schedules.
 
 Hardware models are calibrated against public datasheets; see
 ``V100_PCIE`` (the paper's testbed) and ``TPU_V5E_HOST`` (the adapted
@@ -31,13 +30,15 @@ target: host<->HBM streaming over the v5e host link).
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Literal, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Union
 
-from repro.core.blocks import BlockPlan
-from repro.core.outofcore import FieldSpec, OOCConfig
-from repro.kernels.zfp import ref as zfp_ref
+from repro.core.taskgraph import (  # noqa: F401  (re-exported API)
+    Schedule,
+    Task,
+    build_sweep_tasks,
+    get_schedule,
+)
 
 
 @dataclass(frozen=True)
@@ -51,8 +52,8 @@ class Hardware:
     launch_latency: float = 5e-6  # per-task overhead (s)
     # per-codec-call synchronization cost of the paper's modified cuZFP
     # (multi-stage kernels with intra-call stream syncs) — the measured
-    # "unidentified overheads" of §VI-B. The ``overlap`` schedule
-    # (fused single-pass Pallas codec) does not pay it.
+    # "unidentified overheads" of §VI-B. The fused single-pass Pallas
+    # codec (``unitgrain``/``overlap`` schedules) does not pay it.
     codec_sync_overhead: float = 8e-3
 
 
@@ -83,17 +84,6 @@ TPU_V5E_HOST = Hardware(
     compress_bw=200.0e9,
     decompress_bw=250.0e9,
 )
-
-
-@dataclass
-class Task:
-    tid: str
-    resource: str  # h2d | compute | d2h
-    kind: str  # h2d | decompress | stencil | compress | d2h
-    amount: float  # bytes (transfers/codec raw bytes) or cell-updates
-    deps: Tuple[str, ...] = ()
-    block: int = -1
-    sync: bool = False  # pays Hardware.codec_sync_overhead
 
 
 @dataclass
@@ -172,102 +162,11 @@ def simulate(tasks: List[Task], hw: Hardware,
     return Timeline(spans, byid)
 
 
-# ---------------------------------------------------------------------------
-# Task-graph builder from the engine's sweep structure
-# ---------------------------------------------------------------------------
-
-
-def _wire_ratio(spec: FieldSpec, itemsize: int) -> float:
-    if not spec.compressed:
-        return 1.0
-    return zfp_ref.bits_per_value(3, spec.planes) / (8 * itemsize)
-
-
-def build_sweep_tasks(
-    cfg: OOCConfig,
-    sweeps: int = 1,
-    schedule: Literal["paper", "overlap"] = "paper",
-) -> List[Task]:
-    """Tasks for ``sweeps`` consecutive sweeps of the out-of-core engine,
-    mirroring OutOfCoreWave.sweep()'s fetch/compute/writeback structure
-    (units fetched once, common regions shared on device).
-
-    ``schedule="paper"`` models the paper's modified cuZFP: pipelined,
-    but each codec call pays the library's per-call synchronization
-    cost (``Hardware.codec_sync_overhead``) — the "unidentified
-    overheads" of §VI-B. ``schedule="overlap"`` is this framework's
-    fused single-pass codec (the paper's stated future work): codec
-    tasks pay only launch latency.
-    """
-    plan = cfg.plan
-    z, y, x = cfg.shape
-    itemsize = 4 if cfg.dtype == "float32" else 8
-    plane_bytes = y * x * itemsize
-    tasks: List[Task] = []
-
-    def add(tid, resource, kind, amount, deps, block, sync=False):
-        tasks.append(Task(
-            tid, resource, kind, amount, tuple(deps), block,
-            sync=sync and schedule == "paper",
-        ))
-        return tid
-
-    def unit_planes(kind: str, idx: int) -> int:
-        lo, hi = (
-            plan.remainder(idx) if kind == "R" else plan.common(idx)
-        )
-        return hi - lo
-
-    prev_compute = None
-    for s in range(sweeps):
-        for i in range(plan.ndiv):
-            pre = f"s{s}b{i}"
-            h2d_ids, dec_ids = [], []
-            units = [("R", i)] + ([("C", i)] if i < plan.ndiv - 1 else [])
-            for name, spec in cfg.fields.items():
-                for kind, idx in units:
-                    raw = unit_planes(kind, idx) * plane_bytes
-                    wire = raw * _wire_ratio(spec, itemsize)
-                    tid = add(
-                        f"{pre}.h2d.{name}.{kind}{idx}", "h2d", "h2d",
-                        wire, (), i,
-                    )
-                    h2d_ids.append(tid)
-                    if spec.compressed:
-                        dec_ids.append(add(
-                            f"{pre}.dec.{name}.{kind}{idx}", "compute",
-                            "decompress", raw, (tid,), i, sync=True,
-                        ))
-            # stencil: bt steps over the fetched extent
-            cells = (plan.block + 2 * plan.halo) * y * x * cfg.bt
-            deps = tuple(h2d_ids + dec_ids) + (
-                (prev_compute,) if prev_compute else ()
-            )
-            prev_compute = add(
-                f"{pre}.stencil", "compute", "stencil", cells, deps, i
-            )
-            # writeback: R_i and completed C_{i-1} for every RW field
-            wunits = [("R", i)] + ([("C", i - 1)] if i > 0 else [])
-            for name, spec in cfg.fields.items():
-                if spec.role != "rw":
-                    continue
-                for kind, idx in wunits:
-                    raw = unit_planes(kind, idx) * plane_bytes
-                    wire = raw * _wire_ratio(spec, itemsize)
-                    dep: Tuple[str, ...] = (prev_compute,)
-                    if spec.compressed:
-                        dep = (add(
-                            f"{pre}.comp.{name}.{kind}{idx}", "compute",
-                            "compress", raw, dep, i, sync=True,
-                        ),)
-                    add(
-                        f"{pre}.d2h.{name}.{kind}{idx}", "d2h", "d2h",
-                        wire, dep, i,
-                    )
-    return tasks
-
-
 def sweep_timeline(
-    cfg: OOCConfig, hw: Hardware, sweeps: int = 1, **kw
+    cfg, hw: Hardware, sweeps: int = 1,
+    schedule: Union[str, Schedule] = "paper",
 ) -> Timeline:
-    return simulate(build_sweep_tasks(cfg, sweeps=sweeps, **kw), hw)
+    """Replay ``sweeps`` sweeps of ``cfg`` under ``schedule`` on ``hw``."""
+    return simulate(
+        build_sweep_tasks(cfg, sweeps=sweeps, schedule=schedule), hw
+    )

@@ -1,0 +1,225 @@
+"""Shared task-graph representation for the out-of-core sweep.
+
+One graph, two consumers:
+
+* ``repro.core.pipeline`` *replays* the graph on an event-driven
+  three-stream timeline with hardware constants (Figs. 5/6).
+* ``repro.core.executor`` *executes* the graph for real: every h2d/d2h
+  task becomes an actual host<->device transfer, every codec/stencil
+  task an actual kernel call, with a bounded in-flight window.
+
+A sweep's graph has five task kinds on three resources:
+
+  resource ``h2d``      kind ``h2d``                      (DMA in)
+  resource ``compute``  kinds ``decompress|stencil|compress``
+  resource ``d2h``      kind ``d2h``                      (DMA out)
+
+``amount`` is bytes for transfers/codec (raw bytes through the codec,
+wire bytes on the link) and cell-updates for the stencil.
+
+Schedules are pluggable strategies shared by the replay and the live
+executor:
+
+* ``paper``     the paper's modified-cuZFP pipeline: block-granularity
+                issue, every codec call pays the library's per-call
+                stream-sync cost (``Hardware.codec_sync_overhead`` —
+                the "unidentified overheads" of §VI-B).
+* ``unitgrain`` (alias ``overlap``) beyond-paper fused single-pass
+                codec: units ship as each is encoded and codec tasks
+                pay only launch latency.
+* ``depth-k``   (``depth2``, ``depth3``, ...) unitgrain plus a bounded
+                in-flight window: at most ``k`` block visits may hold
+                device buffers at once, encoded as explicit dependency
+                edges from each visit's first fetch to the visit
+                ``k`` earlier having fully drained. This is the
+                prefetch depth the live executor enforces (the paper's
+                three-stream pipeline holds 2-3 blocks resident).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.kernels.zfp import ref as zfp_ref
+
+
+@dataclass
+class Transfer:
+    """One realized host<->device transfer (the engines' audit log)."""
+
+    direction: str  # "h2d" | "d2h"
+    field: str
+    unit: Tuple[str, int]
+    raw_bytes: int
+    wire_bytes: int
+    sweep: int
+    block: int
+
+
+@dataclass
+class Task:
+    tid: str
+    resource: str  # h2d | compute | d2h
+    kind: str  # h2d | decompress | stencil | compress | d2h
+    amount: float  # bytes (transfers/codec raw bytes) or cell-updates
+    deps: Tuple[str, ...] = ()
+    block: int = -1
+    sync: bool = False  # pays Hardware.codec_sync_overhead in the replay
+    # live-execution metadata (ignored by the timeline replay)
+    field: str = ""
+    unit: Optional[Tuple[str, int]] = None
+    sweep: int = 0
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Issue-order strategy shared by the replay and the executor."""
+
+    name: str
+    codec_sync: bool = False  # codec calls pay per-call sync (cuZFP)
+    window: Optional[int] = None  # max block visits in flight (None = off)
+
+
+PAPER = Schedule("paper", codec_sync=True)
+UNITGRAIN = Schedule("unitgrain")
+# historical name for unitgrain's fused-codec behaviour
+OVERLAP = Schedule("overlap")
+
+_DEPTH_RE = re.compile(r"depth-?(\d+)")
+
+
+def depth_k(k: int) -> Schedule:
+    if k < 1:
+        raise ValueError(f"depth-k window must be >= 1, got {k}")
+    return Schedule(f"depth{k}", window=k)
+
+
+def get_schedule(sched: Union[str, Schedule]) -> Schedule:
+    """Resolve a schedule name ("paper", "unitgrain", "overlap",
+    "depth2", "depth-3", ...) to a Schedule strategy."""
+    if isinstance(sched, Schedule):
+        return sched
+    if sched == "paper":
+        return PAPER
+    if sched == "unitgrain":
+        return UNITGRAIN
+    if sched == "overlap":
+        return OVERLAP
+    m = _DEPTH_RE.fullmatch(sched)
+    if m:
+        return depth_k(int(m.group(1)))
+    raise ValueError(f"unknown schedule: {sched!r}")
+
+
+def wire_ratio(spec, itemsize: int) -> float:
+    """wire/raw byte ratio of a field spec (1.0 if uncompressed)."""
+    if not spec.compressed:
+        return 1.0
+    return zfp_ref.bits_per_value(3, spec.planes) / (8 * itemsize)
+
+
+def build_sweep_tasks(
+    cfg,
+    sweeps: int = 1,
+    schedule: Union[str, Schedule] = "paper",
+) -> List[Task]:
+    """Tasks for ``sweeps`` consecutive sweeps of the out-of-core engine,
+    mirroring the engines' fetch/compute/writeback structure (units
+    fetched once, common regions shared on device).
+
+    ``cfg`` is an ``repro.core.outofcore.OOCConfig``. The returned list
+    is in dependency (topological) order. With a windowed schedule,
+    extra edges bound how many block visits may be in flight.
+    """
+    sched = get_schedule(schedule)
+    plan = cfg.plan
+    z, y, x = cfg.shape
+    itemsize = 4 if cfg.dtype == "float32" else 8
+    plane_bytes = y * x * itemsize
+    tasks: List[Task] = []
+
+    def add(tid, resource, kind, amount, deps, block, *, sync=False,
+            field="", unit=None, sweep=0):
+        tasks.append(Task(
+            tid, resource, kind, amount, tuple(deps), block,
+            sync=sync and sched.codec_sync, field=field, unit=unit,
+            sweep=sweep,
+        ))
+        return tid
+
+    def unit_planes(kind: str, idx: int) -> int:
+        lo, hi = (
+            plan.remainder(idx) if kind == "R" else plan.common(idx)
+        )
+        return hi - lo
+
+    prev_compute = None
+    # last d2h tid of each block visit, for window edges
+    drain_of_visit: Dict[int, str] = {}
+    for s in range(sweeps):
+        for i in range(plan.ndiv):
+            visit = s * plan.ndiv + i
+            pre = f"s{s}b{i}"
+            window_dep: Tuple[str, ...] = ()
+            if sched.window is not None and visit >= sched.window:
+                prior = drain_of_visit.get(visit - sched.window)
+                if prior is not None:
+                    window_dep = (prior,)
+            h2d_ids, dec_ids = [], []
+            for name, spec in cfg.fields.items():
+                for kind, idx in plan.fetch_units(i):
+                    raw = unit_planes(kind, idx) * plane_bytes
+                    wire = raw * wire_ratio(spec, itemsize)
+                    tid = add(
+                        f"{pre}.h2d.{name}.{kind}{idx}", "h2d", "h2d",
+                        wire, window_dep, i,
+                        field=name, unit=(kind, idx), sweep=s,
+                    )
+                    h2d_ids.append(tid)
+                    if spec.compressed:
+                        dec_ids.append(add(
+                            f"{pre}.dec.{name}.{kind}{idx}", "compute",
+                            "decompress", raw, (tid,), i, sync=True,
+                            field=name, unit=(kind, idx), sweep=s,
+                        ))
+            # stencil: bt steps over the fetched extent
+            cells = (plan.block + 2 * plan.halo) * y * x * cfg.bt
+            deps = tuple(h2d_ids + dec_ids) + (
+                (prev_compute,) if prev_compute else ()
+            )
+            prev_compute = add(
+                f"{pre}.stencil", "compute", "stencil", cells, deps, i,
+                sweep=s,
+            )
+            last_d2h = prev_compute
+            for name, spec in cfg.fields.items():
+                if spec.role != "rw":
+                    continue
+                for kind, idx in plan.writeback_units(i):
+                    raw = unit_planes(kind, idx) * plane_bytes
+                    wire = raw * wire_ratio(spec, itemsize)
+                    dep: Tuple[str, ...] = (prev_compute,)
+                    if spec.compressed:
+                        dep = (add(
+                            f"{pre}.comp.{name}.{kind}{idx}", "compute",
+                            "compress", raw, dep, i, sync=True,
+                            field=name, unit=(kind, idx), sweep=s,
+                        ),)
+                    last_d2h = add(
+                        f"{pre}.d2h.{name}.{kind}{idx}", "d2h", "d2h",
+                        wire, dep, i,
+                        field=name, unit=(kind, idx), sweep=s,
+                    )
+            drain_of_visit[visit] = last_d2h
+    return tasks
+
+
+def wire_totals(tasks: List[Task]) -> Dict[str, float]:
+    """Modeled wire bytes per link direction (h2d/d2h task amounts)."""
+    out = {"h2d": 0.0, "d2h": 0.0}
+    for t in tasks:
+        if t.kind in out:
+            out[t.kind] += t.amount
+    return out

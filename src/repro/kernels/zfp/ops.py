@@ -9,7 +9,7 @@ real TPUs. Both produce bit-identical results (tests/test_zfp_kernel.py).
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import List, Literal, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +73,30 @@ def decompress(
     else:
         xb = ref.decode_blocks(c.payload, c.emax, c.planes, c.ndim_spatial, dtype)
     return ref.unblockify(xb, c.shape, c.ndim_spatial)
+
+
+def compress_units(
+    xs: Sequence[jax.Array],
+    *,
+    planes: int,
+    ndim: int = 3,
+    backend: Backend = "ref",
+    interpret: bool = True,
+) -> List[Compressed]:
+    """Batched encode: dispatch every unit's encoder before blocking on
+    any payload.
+
+    Each ``compress`` call is jit-compiled and asynchronously
+    dispatched, so the returned ``Compressed`` handles are futures —
+    the out-of-core executor ships (D2H) each unit as its encode
+    finishes instead of synchronizing after the whole batch, and the
+    host store seeds all units with a single dispatch burst.
+    """
+    return [
+        compress(x, planes=planes, ndim=ndim, backend=backend,
+                 interpret=interpret)
+        for x in xs
+    ]
 
 
 @functools.partial(jax.jit, static_argnames=("planes", "ndim"))

@@ -58,6 +58,7 @@ def test_uncompressed_matches_incore(sweeps):
     np.testing.assert_allclose(eng.gather("p_prev"), ref_pp, rtol=0, atol=0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("code,max_rel", [(2, 5e-3), (3, 1e-4), (4, 5e-2)])
 def test_compressed_error_bounded(code, max_rel):
     """Paper codes 2-4: lossy but bounded; error grows mildly with steps."""
@@ -73,6 +74,7 @@ def test_compressed_error_bounded(code, max_rel):
     assert rel < max_rel, (code, rel)
 
 
+@pytest.mark.slow
 def test_error_decreases_with_rate():
     p_prev, p_cur, vel2 = _initial(SHAPE)
     steps = 2 * BT

@@ -92,6 +92,40 @@ def test_tpu_projection_bottleneck_moves_with_bt():
     assert t_cmp < t_unc
 
 
+def test_depth_k_window_edges():
+    """depth-k adds backpressure edges: visit v's fetches wait for the
+    drain of visit v-k. A window wide enough to cover the sweep is
+    equivalent to unbounded unitgrain; tighter windows can only slow
+    the replay down (monotone in k)."""
+    cfg = _cfg(2)
+    wide = sweep_timeline(cfg, V100_PCIE, sweeps=2, schedule="depth8")
+    unit = sweep_timeline(cfg, V100_PCIE, sweeps=2, schedule="unitgrain")
+    assert wide.makespan == pytest.approx(unit.makespan)
+    prev = unit.makespan
+    for k in (3, 2, 1):
+        t = sweep_timeline(
+            cfg, V100_PCIE, sweeps=2, schedule=f"depth{k}"
+        ).makespan
+        assert t >= prev - 1e-12, k
+        prev = t
+    # the serialized window (k=1) is strictly slower than overlap
+    assert prev > unit.makespan
+
+
+def test_depth_k_deps_respected():
+    tasks = build_sweep_tasks(_cfg(4), sweeps=2, schedule="depth2")
+    tl = simulate(tasks, V100_PCIE)
+    byid = {t.tid: t for t in tasks}
+    for t in tasks:
+        for d in t.deps:
+            assert tl.spans[d].end <= tl.spans[t.tid].start + 1e-12
+    # window edges exist: some h2d task depends on a d2h task
+    assert any(
+        t.kind == "h2d" and any(byid[d].kind == "d2h" for d in t.deps)
+        for t in tasks
+    )
+
+
 def test_deps_respected():
     tasks = build_sweep_tasks(_cfg(2), sweeps=1)
     tl = simulate(tasks, V100_PCIE)

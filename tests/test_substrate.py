@@ -94,6 +94,12 @@ def test_host_sharding_disjoint():
 
 # --------------------------- checkpoint ---------------------------------
 
+# checkpoint (de)compression needs the optional zstandard package; the
+# module itself imports fine without it (lazy import).
+needs_zstd = pytest.mark.skipif(
+    not CKPT.HAVE_ZSTD, reason="zstandard not installed"
+)
+
 
 def _tree():
     k = jax.random.PRNGKey(0)
@@ -106,6 +112,7 @@ def _tree():
     }
 
 
+@needs_zstd
 def test_checkpoint_roundtrip(tmp_path):
     tree = _tree()
     path = CKPT.save(str(tmp_path), 42, tree)
@@ -119,6 +126,7 @@ def test_checkpoint_roundtrip(tmp_path):
     )
 
 
+@needs_zstd
 def test_checkpoint_lossy(tmp_path):
     tree = {"w": jax.random.normal(jax.random.PRNGKey(1), (128, 64))}
     path = CKPT.save(str(tmp_path), 1, tree, lossy_planes=16)
@@ -134,6 +142,7 @@ def test_checkpoint_lossy(tmp_path):
     assert size(path) < size(lossless)
 
 
+@needs_zstd
 def test_checkpoint_gc_and_atomicity(tmp_path):
     tree = _tree()
     for s in (1, 2, 3, 4, 5):

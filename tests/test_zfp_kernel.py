@@ -24,6 +24,7 @@ def _data(shape, seed, scale=7.3):
     return jax.random.normal(key, shape, dtype=jnp.float32) * scale
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("ndim", [1, 2, 3])
 @pytest.mark.parametrize("planes", PLANES)
 def test_kernel_bitwise_matches_ref(ndim, planes):

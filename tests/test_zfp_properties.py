@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) for the codec's invariants."""
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis
 import hypothesis.strategies as st
 import jax
