@@ -34,6 +34,7 @@ def _run_live() -> None:
         cfg = OOCConfig(LIVE_SHAPE, 4, 2, paper_code_fields(code))
         eng = AsyncExecutor(cfg, p_prev, p_cur, vel2, schedule="depth2")
         eng.sweep()
+        eng.finish()
         tot = eng.transfer_summary()
         emit(
             f"fig6/live/code{code}",

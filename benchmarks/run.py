@@ -1,13 +1,107 @@
 """Benchmark harness: one module per paper table/figure + framework
-micro-benches. Prints ``name,us_per_call,derived`` CSV."""
+micro-benches. Prints ``name,us_per_call,derived`` CSV.
+
+``--smoke`` runs the fig5/fig6 pipeline on a tiny grid (seconds, CPU)
+and writes a ``BENCH_smoke.json`` artifact — wire bytes, modeled sweep
+time, and unit-cache hit rate — so CI tracks the perf trajectory of
+the out-of-core engine on every push.
+"""
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 
+SMOKE_OUT = "BENCH_smoke.json"
+
+
+def smoke(out_path: str = SMOKE_OUT) -> dict:
+    """Tiny-grid fig5/fig6 sweep: live wire-byte accounting (cached vs
+    uncached executor) + modeled sweep times, as one JSON artifact."""
+    import numpy as np
+
+    from repro.core.executor import AsyncExecutor
+    from repro.core.outofcore import OOCConfig, paper_code_fields
+    from repro.core.pipeline import V100_PCIE, sweep_timeline
+    from repro.kernels.stencil import ref as stencil_ref
+
+    shape, ndiv, bt, sweeps = (96, 16, 16), 4, 2, 3
+    p_cur = np.asarray(stencil_ref.ricker_source(shape), np.float32)
+    p_prev = 0.95 * p_cur
+    vel2 = np.full(shape, 0.07, np.float32)
+    result = {
+        "config": {
+            "shape": shape, "ndiv": ndiv, "bt": bt, "sweeps": sweeps,
+        },
+        "codes": {},
+    }
+    for code in (1, 2, 4):
+        cfg = OOCConfig(shape, ndiv, bt, paper_code_fields(code))
+        row = {}
+        for label, budget in (("uncached", 0), ("cached", 1 << 30)):
+            eng = AsyncExecutor(
+                cfg, p_prev, p_cur, vel2, schedule="depth2",
+                cache_bytes=budget,
+            )
+            t0 = time.perf_counter()
+            eng.run(bt)  # warmup sweep (cold fetches, jit compile)
+            cpre = eng.stats()["cache"]
+            eng.run((sweeps - 1) * bt)
+            wall = time.perf_counter() - t0
+            tot = eng.transfer_summary()
+            # steady state = everything after the warmup sweep
+            steady_h2d = sum(
+                t.wire_bytes for t in eng.transfers
+                if t.direction == "h2d" and t.sweep > 0
+            ) // (sweeps - 1)
+            st = eng.stats()
+            hits = st["cache"]["hits"] - cpre["hits"]
+            lookups = hits + st["cache"]["misses"] - cpre["misses"]
+            row[label] = {
+                "wall_s": round(wall, 4),
+                "h2d_wire": tot["h2d_wire"],
+                "d2h_wire": tot["d2h_wire"],
+                "steady_h2d_wire_per_sweep": steady_h2d,
+                "steady_cache_hit_rate": round(
+                    hits / lookups if lookups else 0.0, 4
+                ),
+                "max_inflight": st["max_inflight"],
+            }
+        # the acceptance invariant CI keeps holding: nonzero budget ->
+        # strictly fewer steady-state h2d wire bytes per sweep
+        assert (
+            row["cached"]["steady_h2d_wire_per_sweep"]
+            < row["uncached"]["steady_h2d_wire_per_sweep"]
+        ), (code, row)
+        mstats = {}
+        tl = sweep_timeline(
+            cfg, V100_PCIE, sweeps=sweeps, schedule="depth2",
+            cache_bytes=1 << 30, stats=mstats,
+        )
+        base = sweep_timeline(
+            cfg, V100_PCIE, sweeps=sweeps, schedule="paper"
+        )
+        row["modeled"] = {
+            "sweep_time_s": round(tl.makespan / sweeps, 6),
+            "paper_sweep_time_s": round(base.makespan / sweeps, 6),
+            "h2d_elided": mstats["h2d_elided"],
+            "model_hit_rate": round(mstats["hit_rate"], 4),
+        }
+        result["codes"][f"code{code}"] = row
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_path}", file=sys.stderr)
+    return result
+
 
 def main() -> None:
+    if "--smoke" in sys.argv:
+        out = smoke()
+        json.dump(out, sys.stdout, indent=2, sort_keys=True)
+        print()
+        return
+
     from benchmarks import (
         codec_throughput,
         fig5_performance,

@@ -1,4 +1,4 @@
-"""Asynchronous double-buffered out-of-core executor.
+"""Asynchronous out-of-core executor: cross-sweep pipeline + unit cache.
 
 This is the *live* engine for the paper's core contribution: the
 overlap of H2D transfer, GPU codec+stencil work, and D2H transfer
@@ -8,26 +8,44 @@ overlap on a modeled timeline, ``AsyncExecutor`` executes the shared
 task graph (``repro.core.taskgraph.build_sweep_tasks``) for real:
 
 * every ``h2d`` task stages a host unit onto the device
-  (``jnp.asarray`` of the raw planes or of the compressed payload);
+  (``jnp.asarray`` of the raw planes or of the compressed payload) —
+  unless the unit's *current version* is still resident in the device
+  unit cache, in which case the transfer is elided entirely;
 * every ``decompress``/``stencil``/``compress`` task launches the
   corresponding kernel — all JAX calls here are asynchronously
-  dispatched, so the device queue runs ahead of the host;
+  dispatched (decompression through the batched ``decompress_units``
+  burst), so the device queue runs ahead of the host;
 * every ``d2h`` task is *deferred*: the computed (or encoded) unit is
   parked in the in-flight window and only materialized to host memory
   (``np.asarray``, the actual D2H) when the window must drain.
 
-The window is bounded: at most ``depth`` block visits may hold pending
-writebacks at once (default 2, i.e. double buffering — the paper's
-three-stream pipeline keeps 2-3 blocks resident). Admitting a new
-block past the bound blocks the host on the oldest visit's D2H, which
-is exactly the backpressure edge the ``depth-k`` schedule encodes in
-the simulated graph. Sweeps end with a full drain (the sweep barrier),
-so the host store is consistent before the next sweep refetches.
+The window is bounded — at most ``depth`` block visits may hold pending
+writebacks at once (default 2, i.e. double buffering) — and it stays
+**open across sweep boundaries**: there is no sweep-end drain, so block
+0 of sweep *s+1* starts fetching while the tail blocks of sweep *s* are
+still computing or writing back. Correctness across the boundary rests
+on unit *versions* (``HostUnitStore.version_of`` counts committed
+writebacks; the executor counts issued ones): a fetch whose newest
+version is still parked in the window first drains the window up to
+that writeback — the fetch-after-writeback hazard the multi-sweep
+graph encodes as dependency edges instead of a global barrier. The
+final drain happens in ``run()``/``finish()``/``gather()``.
+
+The device-resident unit cache (``repro.core.unitcache.UnitCache``,
+byte-budgeted LRU over compressed payloads) short-circuits the fetch
+path: writebacks deposit their on-device ``Compressed`` handle (or raw
+device array) keyed by the new version *before* the host
+materialization, and read-only fields deposit on first fetch, so in
+steady state a generous budget drives per-sweep ``h2d_wire`` to zero.
+Cache hits emit no ``h2d`` transfer record. ``cache_bytes=0`` (the
+default) disables the cache and reduces to fetch-every-sweep.
 
 Numerics: the executor issues the *same* JAX ops on the same values as
 the synchronous engine — assembly, temporal-blocked stencil, fixed-rate
-codec — so its output is bit-identical (tests/test_executor.py), no
-matter how the overlap interleaves materialization.
+codec — and the host round-trip it elides on a cache hit is
+byte-preserving, so its output is bit-identical (tests/test_executor.py)
+no matter how the overlap interleaves materialization or how many
+transfers the cache elides.
 """
 
 from __future__ import annotations
@@ -47,16 +65,21 @@ from repro.core.taskgraph import (
     build_sweep_tasks,
     get_schedule,
 )
+from repro.core.unitcache import UnitCache
 from repro.kernels.stencil import ops as stencil_ops
 from repro.kernels.zfp import ops as zfp_ops
 from repro.kernels.zfp.ref import Compressed
 
 UnitKey = Tuple[str, Tuple[str, int]]  # (field, (kind, idx))
 
+# one parked visit: (producing sweep no, [(task, value, raw)])
+_Parked = Tuple[int, List[Tuple[Task, object, int]]]
+
 
 class AsyncExecutor:
     """Executes the shared out-of-core task graph with a bounded
-    in-flight window and deferred (overlapped) writebacks."""
+    in-flight window that spans sweep boundaries, deferred (overlapped)
+    writebacks, and a device-resident compressed-unit cache."""
 
     def __init__(
         self,
@@ -65,6 +88,7 @@ class AsyncExecutor:
         p_cur: np.ndarray,
         vel2: np.ndarray,
         schedule: Union[str, Schedule] = "depth2",
+        cache_bytes: int = 0,
     ):
         self.cfg = cfg
         self.plan = cfg.plan
@@ -76,71 +100,108 @@ class AsyncExecutor:
         self.depth = self.schedule.window or 2
         self.store = HostUnitStore(cfg)
         self.store.seed({"p_prev": p_prev, "p_cur": p_cur, "vel2": vel2})
+        self.cache = UnitCache(cache_bytes)
         self.transfers: List[Transfer] = []
         self.sweeps_done = 0
         self.max_inflight = 0  # peak block visits with pending D2H
         # the graph depends only on (cfg, schedule), both immutable:
-        # build it once and replay it every sweep
+        # build the cache-free single-sweep template once and replay it
+        # every sweep (cache hits are a live decision per fetch)
         self._by_block: List[List[Task]] = [
             [] for _ in range(self.plan.ndiv)
         ]
         for t in build_sweep_tasks(cfg, sweeps=1, schedule=self.schedule):
             self._by_block[t.block].append(t)
 
-        # per-sweep live state
+        # live state
         self._dev: Dict[UnitKey, jax.Array] = {}
         self._staged: Dict[UnitKey, Compressed] = {}
         self._outvals: Dict[UnitKey, jax.Array] = {}
         self._outraw: Dict[UnitKey, int] = {}
-        # visits (block indices) whose d2h tasks are parked, oldest first
-        self._pending: Deque[Tuple[int, List[Tuple[Task, object, int]]]] = (
-            deque()
-        )
+        # newest issued (committed or parked) version per unit
+        self._ver: Dict[UnitKey, int] = {}
+        # visits whose d2h tasks are parked, oldest first; survives
+        # sweep boundaries (the cross-sweep window)
+        self._pending: Deque[_Parked] = deque()
 
     # ------------------------------------------------------------------
     # window management
     # ------------------------------------------------------------------
     def _drain_one(self) -> None:
         """Materialize the oldest visit's writebacks (blocks on D2H)."""
-        _, parked = self._pending.popleft()
+        sweep_no, parked = self._pending.popleft()
         for task, value, raw in parked:
             kind, idx = task.unit
             wire = self.store.put(task.field, kind, idx, value)
             self.transfers.append(Transfer(
                 "d2h", task.field, task.unit, raw, wire,
-                self.sweeps_done, task.block,
+                sweep_no, task.block,
             ))
 
     def _drain_all(self) -> None:
         while self._pending:
             self._drain_one()
 
-    def _admit(self, block: int) -> None:
+    def _admit(self) -> None:
         """Admit a block visit to the window, draining if at depth."""
         while len(self._pending) >= self.depth:
+            self._drain_one()
+
+    def _drain_for(self, key: UnitKey) -> None:
+        """Fetch-after-writeback hazard: if ``key``'s newest version is
+        still parked in the window, drain until the host copy is
+        current (the dependency edge the multi-sweep graph encodes)."""
+        field, (kind, idx) = key
+        while (self._pending and
+               self.store.version_of(field, kind, idx)
+               < self._ver.get(key, 0)):
             self._drain_one()
 
     # ------------------------------------------------------------------
     # task actions
     # ------------------------------------------------------------------
     def _exec_h2d(self, task: Task) -> None:
+        key = (task.field, task.unit)
+        ver = self._ver.get(key, 0)
+        if self.cache.enabled:
+            hit, cached = self.cache.lookup(key, ver)
+            if hit:
+                # current version resident on device: H2D elided, no
+                # transfer record (the wire sees nothing)
+                if isinstance(cached, Compressed):
+                    self._staged[key] = cached
+                else:
+                    self._dev[key] = cached
+                return
+        self._drain_for(key)
         kind, idx = task.unit
         dev, raw, wire = self.store.stage(task.field, kind, idx)
-        key = (task.field, task.unit)
         if isinstance(dev, Compressed):
             self._staged[key] = dev  # decompress task completes it
         else:
             self._dev[key] = dev
+        if self.cache.enabled and self.cfg.fields[task.field].role != "rw":
+            # never written back: deposit the fetched payload so later
+            # sweeps hit (rw fields deposit at writeback instead)
+            self.cache.deposit(key, ver, dev, wire)
         self.transfers.append(Transfer(
             "h2d", task.field, task.unit, raw, wire,
             self.sweeps_done, task.block,
         ))
 
-    def _exec_decompress(self, task: Task) -> None:
-        key = (task.field, task.unit)
-        self._dev[key] = zfp_ops.decompress(
-            self._staged.pop(key), backend=self.cfg.backend
+    def _exec_decompress(self, tasks: List[Task]) -> None:
+        """Decode a visit's staged units via the shared batched entry
+        point (each jitted decode is async-dispatched either way; this
+        keeps the executor on the same code path as gather)."""
+        if not tasks:
+            return
+        keys = [(t.field, t.unit) for t in tasks]
+        decoded = zfp_ops.decompress_units(
+            [self._staged.pop(k) for k in keys],
+            backend=self.cfg.backend,
         )
+        for k, arr in zip(keys, decoded):
+            self._dev[k] = arr
 
     def _assemble(self, name: str, i: int,
                   shared: Optional[jax.Array]) -> jax.Array:
@@ -217,11 +278,39 @@ class AsyncExecutor:
             for t, c in zip(ts, encoded):
                 self._outvals[(t.field, t.unit)] = c
 
+    def _park_writebacks(self, btasks: List[Task]) -> None:
+        """Bump unit versions, deposit the on-device payloads into the
+        cache (so the next sweep can hit before the D2H even lands),
+        and park the d2h tasks in the window."""
+        parked: List[Tuple[Task, object, int]] = []
+        for t in (t for t in btasks if t.kind == "d2h"):
+            key = (t.field, t.unit)
+            val = self._outvals.pop(key)
+            raw = self._outraw.pop(key)
+            ver = self._ver.get(key, 0) + 1
+            self._ver[key] = ver
+            if self.cache.enabled:
+                if isinstance(val, Compressed):
+                    nbytes = val.nbytes()
+                else:
+                    nbytes = int(val.size) * val.dtype.itemsize
+                self.cache.deposit(key, ver, val, nbytes)
+            parked.append((t, val, raw))
+        if parked:
+            self._pending.append((self.sweeps_done, parked))
+        self.max_inflight = max(self.max_inflight, len(self._pending))
+
     # ------------------------------------------------------------------
     # sweep loop
     # ------------------------------------------------------------------
     def sweep(self) -> None:
-        """One overlapped pass over all blocks (bt time steps)."""
+        """One overlapped pass over all blocks (bt time steps).
+
+        No sweep-end drain: up to ``depth`` tail visits stay parked in
+        the window so the next sweep's head overlaps them. Call
+        ``finish()`` (or ``gather()``/``run()``, which do) to force the
+        host store consistent.
+        """
         plan = self.plan
         held: Dict[str, jax.Array] = {}
         shared: Dict[str, Optional[jax.Array]] = {
@@ -230,36 +319,33 @@ class AsyncExecutor:
         for i in range(plan.ndiv):
             btasks = self._by_block[i]
             # window admission precedes this visit's first transfer
-            self._admit(i)
+            self._admit()
             for t in (t for t in btasks if t.kind == "h2d"):
                 self._exec_h2d(t)
-            for t in (t for t in btasks if t.kind == "decompress"):
-                self._exec_decompress(t)
+            self._exec_decompress(
+                [t for t in btasks if t.kind == "decompress"]
+            )
             shared = self._exec_stencil(i, shared, held)
             self._exec_compress(
                 [t for t in btasks if t.kind == "compress"]
             )
-            parked = []
-            for t in (t for t in btasks if t.kind == "d2h"):
-                key = (t.field, t.unit)
-                parked.append((
-                    t, self._outvals.pop(key), self._outraw.pop(key)
-                ))
-            if parked:
-                self._pending.append((i, parked))
-            self.max_inflight = max(self.max_inflight, len(self._pending))
-        # sweep barrier: host store consistent before the next refetch
-        self._drain_all()
+            self._park_writebacks(btasks)
         assert not self._dev and not self._staged and not self._outvals
         self.sweeps_done += 1
+
+    def finish(self) -> None:
+        """Drain the window: host store consistent with all sweeps."""
+        self._drain_all()
 
     def run(self, total_steps: int) -> None:
         assert total_steps % self.cfg.bt == 0
         for _ in range(total_steps // self.cfg.bt):
             self.sweep()
+        self.finish()
 
     # ------------------------------------------------------------------
     def gather(self, name: str) -> np.ndarray:
+        self.finish()
         return self.store.gather(name)
 
     def transfer_summary(self) -> Dict[str, int]:
@@ -269,9 +355,13 @@ class AsyncExecutor:
             tot[f"{t.direction}_wire"] += t.wire_bytes
         return tot
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict[str, object]:
         return {
             "depth": self.depth,
             "max_inflight": self.max_inflight,
             "sweeps": self.sweeps_done,
+            "pending": len(self._pending),
+            "cache": self.cache.stats.as_dict(),
+            "cache_bytes_used": self.cache.bytes_used,
+            "cache_peak_bytes": self.cache.peak_bytes,
         }

@@ -118,22 +118,32 @@ class HostUnitStore:
     def __init__(self, cfg: OOCConfig):
         self.cfg = cfg
         self._units: Dict[Tuple[str, str, int], object] = {}
+        # writebacks since seeding, per unit (seeded units are v0) —
+        # the executor's fetch-after-writeback hazard tracking and the
+        # device unit cache both key validity on these counters
+        self._versions: Dict[Tuple[str, str, int], int] = {}
 
     def put(self, field: str, kind: str, idx: int, value) -> int:
         """Store; returns wire bytes (what crossed the link)."""
+        key = (field, kind, idx)
+        self._versions[key] = self._versions.get(key, -1) + 1
         if isinstance(value, Compressed):
             host = Compressed(
                 np.asarray(value.payload), np.asarray(value.emax),
                 value.shape, value.planes, value.ndim_spatial, value.dtype,
             )
-            self._units[(field, kind, idx)] = host
+            self._units[key] = host
             return host.nbytes()
         arr = np.asarray(value)
-        self._units[(field, kind, idx)] = arr
+        self._units[key] = arr
         return arr.nbytes
 
     def get(self, field: str, kind: str, idx: int):
         return self._units[(field, kind, idx)]
+
+    def version_of(self, field: str, kind: str, idx: int) -> int:
+        """Committed writebacks since seeding (0 = still the seed)."""
+        return self._versions.get((field, kind, idx), 0)
 
     def seed(self, full: Dict[str, np.ndarray]) -> None:
         """Initial decomposition of full fields into host units.
@@ -174,18 +184,31 @@ class HostUnitStore:
         return jnp.asarray(stored), stored.nbytes, stored.nbytes
 
     def gather(self, name: str) -> np.ndarray:
-        """Reassemble a full field from host units (decompressing)."""
+        """Reassemble a full field from host units (decompressing).
+
+        Compressed units are staged and decoded through the batched
+        ``decompress_units`` entry point: every unit's decoder is
+        dispatched before any payload is awaited, instead of one
+        synchronous stage/decode round-trip per unit.
+        """
         cfg = self.cfg
         out = np.zeros(cfg.shape, dtype=cfg.dtype)
+        comp_spans: List[Tuple[int, int]] = []
+        comp_payloads: List[Compressed] = []
         for kind, idx, (lo, hi) in cfg.plan.units():
             stored = self.get(name, kind, idx)
             if isinstance(stored, Compressed):
                 dev, _, _ = self.stage(name, kind, idx)
-                out[lo:hi] = np.asarray(
-                    zfp_ops.decompress(dev, backend=cfg.backend)
-                )
+                comp_spans.append((lo, hi))
+                comp_payloads.append(dev)
             else:
                 out[lo:hi] = stored
+        if comp_payloads:
+            decoded = zfp_ops.decompress_units(
+                comp_payloads, backend=cfg.backend
+            )
+            for (lo, hi), arr in zip(comp_spans, decoded):
+                out[lo:hi] = np.asarray(arr)
         return out
 
 
@@ -309,6 +332,10 @@ class OutOfCoreWave:
         assert total_steps % self.cfg.bt == 0
         for _ in range(total_steps // self.cfg.bt):
             self.sweep()
+
+    def finish(self) -> None:
+        """API parity with ``AsyncExecutor``: the synchronous engine
+        writes back within each sweep, so there is nothing to drain."""
 
     # ------------------------------------------------------------------
     def gather(self, name: str) -> np.ndarray:

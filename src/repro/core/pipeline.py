@@ -165,8 +165,18 @@ def simulate(tasks: List[Task], hw: Hardware,
 def sweep_timeline(
     cfg, hw: Hardware, sweeps: int = 1,
     schedule: Union[str, Schedule] = "paper",
+    cache_bytes: int = 0,
+    stats: Optional[Dict[str, object]] = None,
 ) -> Timeline:
-    """Replay ``sweeps`` sweeps of ``cfg`` under ``schedule`` on ``hw``."""
+    """Replay ``sweeps`` sweeps of ``cfg`` under ``schedule`` on ``hw``.
+
+    ``cache_bytes`` models the executor's device-resident unit cache:
+    fetches whose current version is still resident emit no h2d task,
+    so the replay prices exactly the transfers the live engine pays
+    (``stats`` receives the modeled hit/elision counters)."""
     return simulate(
-        build_sweep_tasks(cfg, sweeps=sweeps, schedule=schedule), hw
+        build_sweep_tasks(
+            cfg, sweeps=sweeps, schedule=schedule,
+            cache_bytes=cache_bytes, stats=stats,
+        ), hw
     )

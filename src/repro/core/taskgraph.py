@@ -17,6 +17,15 @@ A sweep's graph has five task kinds on three resources:
 ``amount`` is bytes for transfers/codec (raw bytes through the codec,
 wire bytes on the link) and cell-updates for the stencil.
 
+Multi-sweep graphs are continuous: instead of a sweep barrier, every
+unit carries a version counter (one bump per writeback) and sweep
+*s+1*'s fetch of a unit depends on the d2h task that committed its
+current version — the fetch-after-writeback hazard as dependency
+edges. ``cache_bytes`` additionally models the executor's
+device-resident unit cache (LRU over compressed payloads): resident
+fetches emit no h2d task at all, so the replay prices exactly the
+elided transfers the live engine skips.
+
 Schedules are pluggable strategies shared by the replay and the live
 executor:
 
@@ -42,6 +51,7 @@ import re
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple, Union
 
+from repro.core.unitcache import UnitCache
 from repro.kernels.zfp import ref as zfp_ref
 
 
@@ -71,6 +81,9 @@ class Task:
     field: str = ""
     unit: Optional[Tuple[str, int]] = None
     sweep: int = 0
+    # unit version this task reads (h2d/decompress) or produces
+    # (compress/d2h); versions count writebacks since seeding
+    version: int = 0
 
 
 @dataclass(frozen=True)
@@ -120,10 +133,32 @@ def wire_ratio(spec, itemsize: int) -> float:
     return zfp_ref.bits_per_value(3, spec.planes) / (8 * itemsize)
 
 
+def unit_wire_bytes(
+    spec, shape: Tuple[int, int, int], itemsize: int
+) -> int:
+    """Exact on-wire bytes of one stored unit — for compressed fields
+    the actual ``Compressed.nbytes()`` (uint32 payload words after the
+    pad-to-4 blockify, plus the 2-byte emax header per block), so the
+    modeled unit cache budgets the same numbers the live executor
+    deposits."""
+    if not spec.compressed:
+        n = 1
+        for s in shape:
+            n *= s
+        return n * itemsize
+    nb = 1
+    for s in shape:
+        nb *= -(-s // 4)
+    words = zfp_ref.payload_words(3, spec.planes, 8 * itemsize)
+    return nb * (words * 4 + 2)
+
+
 def build_sweep_tasks(
     cfg,
     sweeps: int = 1,
     schedule: Union[str, Schedule] = "paper",
+    cache_bytes: int = 0,
+    stats: Optional[Dict[str, object]] = None,
 ) -> List[Task]:
     """Tasks for ``sweeps`` consecutive sweeps of the out-of-core engine,
     mirroring the engines' fetch/compute/writeback structure (units
@@ -132,6 +167,23 @@ def build_sweep_tasks(
     ``cfg`` is an ``repro.core.outofcore.OOCConfig``. The returned list
     is in dependency (topological) order. With a windowed schedule,
     extra edges bound how many block visits may be in flight.
+
+    The graph is *continuous across sweeps*: there is no sweep barrier.
+    Each unit carries a version counter bumped by every writeback, and
+    sweep *s+1*'s fetch of a unit depends on the d2h task that produced
+    its current version (the fetch-after-writeback hazard as a
+    dependency edge), so block 0 of the next sweep may start fetching
+    while the tail of the previous sweep is still computing or
+    writing back.
+
+    ``cache_bytes`` models the executor's device-resident unit cache
+    (``repro.core.unitcache.UnitCache``): writebacks deposit their
+    payload, read-only fields deposit on first fetch, and a fetch whose
+    current version is still resident emits *no* h2d task (compressed
+    units keep their decompress task, now depending on the depositing
+    codec task). The replay therefore prices exactly the transfers the
+    live executor performs. ``stats``, if given, is filled with the
+    modeled cache counters and elision totals.
     """
     sched = get_schedule(schedule)
     plan = cfg.plan
@@ -139,21 +191,34 @@ def build_sweep_tasks(
     itemsize = 4 if cfg.dtype == "float32" else 8
     plane_bytes = y * x * itemsize
     tasks: List[Task] = []
+    cache = UnitCache(cache_bytes)
+    version: Dict[Tuple[str, Tuple[str, int]], int] = {}
+    # tid of the d2h producing each unit's current host version
+    writeback_of: Dict[Tuple[str, Tuple[str, int]], str] = {}
+    # tid of the compute task that deposited the cached payload
+    deposit_of: Dict[Tuple[str, Tuple[str, int]], str] = {}
+    h2d_tasks = h2d_elided = 0
 
     def add(tid, resource, kind, amount, deps, block, *, sync=False,
-            field="", unit=None, sweep=0):
+            field="", unit=None, sweep=0, ver=0):
         tasks.append(Task(
             tid, resource, kind, amount, tuple(deps), block,
             sync=sync and sched.codec_sync, field=field, unit=unit,
-            sweep=sweep,
+            sweep=sweep, version=ver,
         ))
         return tid
 
+    def unit_span(kind: str, idx: int) -> Tuple[int, int]:
+        return plan.remainder(idx) if kind == "R" else plan.common(idx)
+
     def unit_planes(kind: str, idx: int) -> int:
-        lo, hi = (
-            plan.remainder(idx) if kind == "R" else plan.common(idx)
-        )
+        lo, hi = unit_span(kind, idx)
         return hi - lo
+
+    def exact_nbytes(spec, kind: str, idx: int) -> int:
+        return unit_wire_bytes(
+            spec, (unit_planes(kind, idx), y, x), itemsize
+        )
 
     prev_compute = None
     # last d2h tid of each block visit, for window edges
@@ -170,25 +235,58 @@ def build_sweep_tasks(
             h2d_ids, dec_ids = [], []
             for name, spec in cfg.fields.items():
                 for kind, idx in plan.fetch_units(i):
+                    key = (name, (kind, idx))
+                    ver = version.get(key, 0)
                     raw = unit_planes(kind, idx) * plane_bytes
                     wire = raw * wire_ratio(spec, itemsize)
+                    hit = False
+                    if cache.enabled:
+                        hit, _ = cache.lookup(key, ver)
+                    if hit:
+                        h2d_elided += 1
+                        if spec.compressed:
+                            ddep = deposit_of.get(key)
+                            dec_ids.append(add(
+                                f"{pre}.dec.{name}.{kind}{idx}",
+                                "compute", "decompress", raw,
+                                (ddep,) if ddep else window_dep, i,
+                                sync=True, field=name, unit=(kind, idx),
+                                sweep=s, ver=ver,
+                            ))
+                        continue
+                    h2d_tasks += 1
+                    deps = window_dep
+                    wb = writeback_of.get(key)
+                    if wb is not None:
+                        deps = deps + (wb,)
                     tid = add(
                         f"{pre}.h2d.{name}.{kind}{idx}", "h2d", "h2d",
-                        wire, window_dep, i,
-                        field=name, unit=(kind, idx), sweep=s,
+                        wire, deps, i,
+                        field=name, unit=(kind, idx), sweep=s, ver=ver,
                     )
                     h2d_ids.append(tid)
+                    if spec.role != "rw" and cache.enabled:
+                        # never written back: cache the fetched payload
+                        cache.deposit(
+                            key, ver, None, exact_nbytes(spec, kind, idx)
+                        )
+                        deposit_of[key] = tid
                     if spec.compressed:
                         dec_ids.append(add(
                             f"{pre}.dec.{name}.{kind}{idx}", "compute",
                             "decompress", raw, (tid,), i, sync=True,
                             field=name, unit=(kind, idx), sweep=s,
+                            ver=ver,
                         ))
-            # stencil: bt steps over the fetched extent
+            # stencil: bt steps over the fetched extent; window_dep kept
+            # explicitly so the bound survives fully-elided fetch sets
             cells = (plan.block + 2 * plan.halo) * y * x * cfg.bt
             deps = tuple(h2d_ids + dec_ids) + (
                 (prev_compute,) if prev_compute else ()
             )
+            for d in window_dep:
+                if d not in deps:
+                    deps = deps + (d,)
             prev_compute = add(
                 f"{pre}.stencil", "compute", "stencil", cells, deps, i,
                 sweep=s,
@@ -198,6 +296,9 @@ def build_sweep_tasks(
                 if spec.role != "rw":
                     continue
                 for kind, idx in plan.writeback_units(i):
+                    key = (name, (kind, idx))
+                    ver = version.get(key, 0) + 1
+                    version[key] = ver
                     raw = unit_planes(kind, idx) * plane_bytes
                     wire = raw * wire_ratio(spec, itemsize)
                     dep: Tuple[str, ...] = (prev_compute,)
@@ -206,13 +307,33 @@ def build_sweep_tasks(
                             f"{pre}.comp.{name}.{kind}{idx}", "compute",
                             "compress", raw, dep, i, sync=True,
                             field=name, unit=(kind, idx), sweep=s,
+                            ver=ver,
                         ),)
+                    if cache.enabled:
+                        # deposited before (independent of) the host
+                        # materialization — the next sweep can hit even
+                        # while this d2h is still in flight
+                        cache.deposit(
+                            key, ver, None, exact_nbytes(spec, kind, idx)
+                        )
+                        deposit_of[key] = dep[0]
                     last_d2h = add(
                         f"{pre}.d2h.{name}.{kind}{idx}", "d2h", "d2h",
                         wire, dep, i,
-                        field=name, unit=(kind, idx), sweep=s,
+                        field=name, unit=(kind, idx), sweep=s, ver=ver,
                     )
+                    writeback_of[key] = last_d2h
             drain_of_visit[visit] = last_d2h
+    if stats is not None:
+        stats.update(cache.stats.as_dict())
+        # elided wire bytes are exactly the cache's hit_wire_bytes
+        # (deposits use exact payload sizes) — one accounting, shared
+        # with the live executor's CacheStats
+        stats.update({
+            "h2d_tasks": h2d_tasks,
+            "h2d_elided": h2d_elided,
+            "cache_peak_bytes": cache.peak_bytes,
+        })
     return tasks
 
 

@@ -1,0 +1,136 @@
+"""Device-resident compressed-unit cache (byte-budgeted LRU).
+
+The out-of-core executor re-fetches every storage unit from the host on
+every sweep, even though sweep *s+1* wants exactly the bytes sweep *s*
+just compressed on device and shipped out. Keeping those on-device
+payloads resident turns the steady-state fetch into a no-op: a unit
+whose *current version* is still cached skips the H2D transfer entirely
+(compressed units still pay the on-device decompress; raw units pay
+nothing).
+
+The cache is deliberately dumb and deterministic — plain LRU over unit
+keys with a byte budget — because the *same* policy is replayed by the
+task-graph builder (``repro.core.taskgraph.build_sweep_tasks`` with
+``cache_bytes``) to model the elided transfers in the Fig. 5/6
+timelines. Determinism is the contract: builder and live executor must
+agree on every hit/miss/eviction given the same budget and access
+order, which the tests assert transfer-by-transfer.
+
+Entries are versioned: ``deposit`` records the unit version the payload
+corresponds to and ``lookup`` only hits when the cached version equals
+the requested (current) one. A stale entry is dropped on lookup so its
+bytes are reclaimed immediately. ``budget_bytes=0`` disables caching
+(every lookup misses, every deposit is refused) — the executor then
+reduces exactly to the fetch-every-sweep behavior.
+
+The cache is policy only: it never touches JAX. Values are opaque
+(device arrays / ``Compressed`` handles in the executor, ``None`` in
+the graph builder's model), and ``nbytes`` is supplied by the caller so
+the model can use exact analytic payload sizes.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, Hashable, Tuple
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    deposits: int = 0
+    refusals: int = 0  # deposits rejected (entry larger than budget)
+    evictions: int = 0
+    hit_wire_bytes: int = 0  # link bytes elided by hits
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "deposits": self.deposits,
+            "refusals": self.refusals,
+            "evictions": self.evictions,
+            "hit_wire_bytes": self.hit_wire_bytes,
+            "hit_rate": self.hit_rate,
+        }
+
+
+@dataclass
+class _Entry:
+    version: int
+    value: Any
+    nbytes: int
+
+
+@dataclass
+class UnitCache:
+    """LRU cache of on-device unit payloads under a byte budget."""
+
+    budget_bytes: int = 0
+    stats: CacheStats = field(default_factory=CacheStats)
+
+    def __post_init__(self):
+        self._entries: "OrderedDict[Hashable, _Entry]" = OrderedDict()
+        self.bytes_used = 0
+        self.peak_bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def enabled(self) -> bool:
+        return self.budget_bytes > 0
+
+    # ------------------------------------------------------------------
+    def lookup(self, key: Hashable, version: int) -> Tuple[bool, Any]:
+        """``(hit, value)`` for the unit at ``version``; hits refresh
+        LRU recency, stale entries are dropped."""
+        ent = self._entries.get(key)
+        if ent is None:
+            self.stats.misses += 1
+            return False, None
+        if ent.version != version:
+            self._drop(key)
+            self.stats.misses += 1
+            return False, None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        self.stats.hit_wire_bytes += ent.nbytes
+        return True, ent.value
+
+    def deposit(
+        self, key: Hashable, version: int, value: Any, nbytes: int
+    ) -> None:
+        """Insert/replace the unit's payload at ``version`` (MRU),
+        evicting LRU entries until the budget holds. A payload larger
+        than the whole budget is refused (and any stale entry for the
+        key dropped)."""
+        if key in self._entries:
+            self._drop(key)
+        if not self.enabled or nbytes > self.budget_bytes:
+            self.stats.refusals += 1
+            return
+        while self.bytes_used + nbytes > self.budget_bytes:
+            _, ent = self._entries.popitem(last=False)
+            self.bytes_used -= ent.nbytes
+            self.stats.evictions += 1
+        self._entries[key] = _Entry(version, value, int(nbytes))
+        self.bytes_used += int(nbytes)
+        self.peak_bytes = max(self.peak_bytes, self.bytes_used)
+        self.stats.deposits += 1
+
+    # ------------------------------------------------------------------
+    def _drop(self, key: Hashable) -> None:
+        ent = self._entries.pop(key, None)
+        if ent is not None:
+            self.bytes_used -= ent.nbytes

@@ -28,6 +28,23 @@ def _pad_blocks(xb: jax.Array, tile: int) -> jax.Array:
     return xb
 
 
+def bucket_tile(nb: int) -> int:
+    """Pallas tile size for an ``nb``-block batch: the next power of
+    two, capped at ``DEFAULT_TILE_BLOCKS``.
+
+    Bucketing bounds codec recompilation: the kernel compiles per
+    (tile, planes, ndim), so with ``tile = min(DEFAULT_TILE_BLOCKS,
+    nb)`` every distinct unit block-count (R vs C units, edge blocks)
+    triggered a fresh Mosaic build. Rounding the pad-to-tile size up to
+    a power of two gives at most ``log2(DEFAULT_TILE_BLOCKS)+1``
+    distinct tiles, so differently-sized units share compiled kernels
+    at the cost of <2x padding waste on the last tile."""
+    tile = 1
+    while tile < nb and tile < kernel.DEFAULT_TILE_BLOCKS:
+        tile <<= 1
+    return tile
+
+
 @functools.partial(
     jax.jit, static_argnames=("planes", "ndim", "backend", "interpret")
 )
@@ -43,7 +60,7 @@ def compress(
     xb = ref.blockify(x, ndim)
     nb = xb.shape[0]
     if backend == "pallas" and x.dtype == jnp.float32:
-        tile = min(kernel.DEFAULT_TILE_BLOCKS, nb)
+        tile = bucket_tile(nb)
         xbp = _pad_blocks(xb, tile)
         payload, emax = kernel.encode_pallas(
             xbp, planes=planes, ndim=ndim, tile_blocks=tile,
@@ -62,7 +79,7 @@ def decompress(
     dtype = jnp.dtype(c.dtype)
     if backend == "pallas" and dtype == jnp.float32:
         nb = c.payload.shape[0]
-        tile = min(kernel.DEFAULT_TILE_BLOCKS, nb)
+        tile = bucket_tile(nb)
         pad = (-nb) % tile
         payload = jnp.pad(c.payload, ((0, pad), (0, 0)))
         emax = jnp.pad(c.emax, (0, pad))[:, None]
@@ -96,6 +113,28 @@ def compress_units(
         compress(x, planes=planes, ndim=ndim, backend=backend,
                  interpret=interpret)
         for x in xs
+    ]
+
+
+def decompress_units(
+    cs: Sequence[Compressed],
+    *,
+    backend: Backend = "ref",
+    interpret: bool = True,
+) -> List[jax.Array]:
+    """Batched decode: dispatch every unit's decoder before blocking on
+    any output — the counterpart of ``compress_units``.
+
+    Each ``decompress`` call is already asynchronously dispatched; the
+    batched entry point exists so callers decode a whole unit list in
+    one burst *before* materializing any of it. That is what fixes
+    ``HostUnitStore.gather``, which previously staged + decoded +
+    ``np.asarray``'d one unit per loop iteration (a synchronous
+    round-trip each). The executor's per-visit decode uses it too, for
+    a single shared code path.
+    """
+    return [
+        decompress(c, backend=backend, interpret=interpret) for c in cs
     ]
 
 

@@ -1,0 +1,98 @@
+"""UnitCache policy: byte-budgeted LRU with versioned entries.
+
+The cache is pure policy (no JAX) and deliberately deterministic — the
+task-graph builder replays the same policy to model elided transfers,
+so these tests pin the exact hit/evict/refuse behavior both sides rely
+on (see tests/test_executor.py for the builder/executor agreement).
+"""
+
+from repro.core.taskgraph import unit_wire_bytes
+from repro.core.unitcache import UnitCache
+from repro.kernels.zfp import ref as zfp_ref
+
+
+def test_disabled_cache_never_hits_or_stores():
+    c = UnitCache(0)
+    assert not c.enabled
+    c.deposit("a", 0, "x", 10)
+    hit, val = c.lookup("a", 0)
+    assert not hit and val is None
+    assert len(c) == 0 and c.bytes_used == 0
+    assert c.stats.deposits == 0 and c.stats.refusals == 1
+
+
+def test_hit_requires_current_version():
+    c = UnitCache(100)
+    c.deposit("a", 1, "v1", 10)
+    hit, val = c.lookup("a", 1)
+    assert hit and val == "v1"
+    # stale version: miss, and the dead entry's bytes are reclaimed
+    hit, _ = c.lookup("a", 2)
+    assert not hit
+    assert c.bytes_used == 0 and len(c) == 0
+
+
+def test_redeposit_replaces_entry_bytes():
+    c = UnitCache(100)
+    c.deposit("a", 1, "v1", 60)
+    c.deposit("a", 2, "v2", 40)
+    assert c.bytes_used == 40 and len(c) == 1
+    assert c.lookup("a", 2) == (True, "v2")
+
+
+def test_lru_eviction_order_and_budget():
+    c = UnitCache(100)
+    c.deposit("a", 0, "A", 40)
+    c.deposit("b", 0, "B", 40)
+    c.lookup("a", 0)  # refresh a: b becomes LRU
+    c.deposit("c", 0, "C", 40)  # overflows: evicts b
+    assert c.lookup("b", 0)[0] is False
+    assert c.lookup("a", 0)[0] is True
+    assert c.lookup("c", 0)[0] is True
+    assert c.bytes_used <= 100
+    assert c.stats.evictions == 1
+
+
+def test_oversized_deposit_refused():
+    c = UnitCache(100)
+    c.deposit("a", 0, "A", 40)
+    c.deposit("big", 0, "B", 101)  # larger than whole budget
+    assert c.lookup("big", 0)[0] is False
+    assert c.lookup("a", 0)[0] is True  # and nothing was evicted for it
+    assert c.stats.refusals == 1
+
+
+def test_stats_and_peak_tracking():
+    c = UnitCache(100)
+    c.deposit("a", 0, "A", 70)
+    c.deposit("b", 0, "B", 50)  # evicts a; peak was 70
+    c.lookup("b", 0)
+    c.lookup("a", 0)
+    assert c.peak_bytes == 70
+    assert c.stats.hits == 1 and c.stats.misses == 1
+    assert c.stats.hit_rate == 0.5
+    d = c.stats.as_dict()
+    assert d["deposits"] == 2 and d["evictions"] == 1
+
+
+def test_unit_wire_bytes_matches_compressed_nbytes():
+    """The builder's analytic payload size must equal the live
+    ``Compressed.nbytes()`` so modeled and real budgets agree."""
+    import jax.numpy as jnp
+
+    from repro.kernels.zfp import ops as zfp_ops
+    from repro.core.outofcore import FieldSpec
+
+    for shape in ((8, 12, 12), (4, 12, 12), (22, 16, 16)):
+        x = jnp.arange(
+            shape[0] * shape[1] * shape[2], dtype=jnp.float32
+        ).reshape(shape) * 1e-3
+        c = zfp_ops.compress(x, planes=12, ndim=3)
+        spec = FieldSpec("rw", 12)
+        assert unit_wire_bytes(spec, shape, 4) == c.nbytes(), shape
+    # uncompressed: plain raw bytes
+    assert unit_wire_bytes(FieldSpec("rw", None), (8, 12, 12), 4) == (
+        8 * 12 * 12 * 4
+    )
+    # sanity: analytic words match the ref codec's accounting
+    assert zfp_ref.payload_words(3, 12, 32) > 0

@@ -91,3 +91,45 @@ def test_tile_padding_edge():
     y = ops.decompress(c, backend="pallas")
     yr = ops.decompress(ops.compress(x, planes=16, ndim=3, backend="ref"))
     np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_bucket_tile_bounds_recompilation():
+    """Pad-to-tile sizes are power-of-two bucketed (capped at
+    DEFAULT_TILE_BLOCKS) so differently-sized units — e.g. an R unit's
+    blocks vs a C unit's — map to a handful of kernel tiles instead of
+    one compile per distinct block count."""
+    assert ops.bucket_tile(1) == 1
+    assert ops.bucket_tile(3) == 4
+    assert ops.bucket_tile(4) == 4
+    assert ops.bucket_tile(5) == 8
+    assert ops.bucket_tile(200) == kernel.DEFAULT_TILE_BLOCKS
+    assert ops.bucket_tile(10_000) == kernel.DEFAULT_TILE_BLOCKS
+    # every block count in an R/C-sized range shares <= log2 tiles
+    tiles = {ops.bucket_tile(nb) for nb in range(1, 257)}
+    assert len(tiles) == 9  # 1,2,4,...,256
+    # bucketed padding stays bit-identical to the oracle across bucket
+    # boundaries (pad rows are encoded then stripped)
+    for planes_z in (4, 8, 20):  # 1, 2, 5 z-blocks -> tiles differ
+        x = _data((planes_z, 8, 8), seed=planes_z)
+        cp = ops.compress(x, planes=12, ndim=3, backend="pallas")
+        cr = ops.compress(x, planes=12, ndim=3, backend="ref")
+        np.testing.assert_array_equal(
+            np.asarray(cp.payload), np.asarray(cr.payload)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ops.decompress(cp, backend="pallas")),
+            np.asarray(ops.decompress(cr, backend="ref")),
+        )
+
+
+def test_decompress_units_batched_matches_single():
+    """Batched decode dispatch == per-unit decode, heterogeneous
+    shapes (the executor's per-visit burst and gather's reassembly)."""
+    xs = [_data((8, 8, 8), seed=1), _data((4, 8, 8), seed=2),
+          _data((12, 8, 8), seed=3)]
+    cs = ops.compress_units(xs, planes=12, ndim=3)
+    batched = ops.decompress_units(cs)
+    for c, y in zip(cs, batched):
+        np.testing.assert_array_equal(
+            np.asarray(y), np.asarray(ops.decompress(c))
+        )
