@@ -49,10 +49,12 @@ def _run_live() -> None:
                 cfg, p_prev, p_cur, vel2, schedule="depth2"
             ),
             # cross-sweep pipeline with the full working set resident:
-            # steady-state sweeps elide every H2D
+            # steady-state sweeps elide every H2D, and the write-back
+            # residency policy commits interior writebacks on device
+            # so they elide every D2H too
             "cached": AsyncExecutor(
                 cfg, p_prev, p_cur, vel2, schedule="depth2",
-                cache_bytes=1 << 30,
+                cache_bytes=1 << 30, policy="write-back",
             ),
         }
         times, wire, hit_rate = {}, {}, {}
@@ -90,6 +92,8 @@ def _run_live() -> None:
             times["cached"] * 1e6,
             f"h2d_wire={wire['cached']['h2d_wire']} "
             f"(uncached {wire['live']['h2d_wire']}) "
+            f"d2h_wire={wire['cached']['d2h_wire']} "
+            f"(uncached {wire['live']['d2h_wire']}) "
             f"steady_hit_rate={hit_rate['cached']:.3f}",
         )
 
@@ -117,18 +121,20 @@ def run() -> None:
                 tl.makespan * 1e6 / SWEEPS,
                 f"speedup={speedup:.3f}x bound={tl.bounding_resource()}",
             )
-    # beyond-paper projection: device-resident unit cache under a v5e
-    # HBM budget. Compression is what makes the resident set fit —
-    # code 4's compressed fields cache fully and steady-state sweeps
-    # elide their H2D; code 1's raw fields thrash the same budget
-    # (LRU scan) and keep paying full transfer.
+    # beyond-paper projection: device residency under a v5e HBM
+    # budget. Compression is what makes the resident set fit — code
+    # 4's compressed fields cache fully, steady-state sweeps elide
+    # their H2D, and write-back commits their writebacks on device so
+    # interior D2H vanishes too; code 1's raw fields thrash the same
+    # budget (LRU scan), keep paying full fetch, and turn their
+    # writebacks into eviction flushes.
     hbm_budget = 12 * 2**30
     for code in (1, 4):
         cfg = OOCConfig(SHAPE, 8, 12, paper_code_fields(code, f32=True))
         stats = {}
         tl = sweep_timeline(
             cfg, TPU_V5E_HOST, sweeps=SWEEPS, schedule="overlap",
-            cache_bytes=hbm_budget, stats=stats,
+            cache_bytes=hbm_budget, stats=stats, policy="write-back",
         )
         emit(
             f"fig5/tpu-v5e/overlap-cached/code{code}",
@@ -136,5 +142,8 @@ def run() -> None:
             f"hit_rate={stats['hit_rate']:.2f} "
             f"h2d_elided={stats['h2d_elided']}/"
             f"{stats['h2d_elided'] + stats['h2d_tasks']} "
-            f"elided_wire={stats['hit_wire_bytes'] / 1e9:.1f}GB",
+            f"elided_wire={stats['hit_wire_bytes'] / 1e9:.1f}GB "
+            f"d2h_elided_wire="
+            f"{stats['d2h_elided_wire_bytes'] / 1e9:.1f}GB "
+            f"flushes={stats['flush_tasks']}",
         )

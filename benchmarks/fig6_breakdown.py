@@ -5,7 +5,19 @@ the bounding operation, paper scale + V100 constants. The paper's
 observation to reproduce: codes 1-3 are bounded by CPU->GPU transfer,
 code 4 flips to (codec-inflated) GPU compute. The CPU-code bar of the
 original figure is modeled at 40-thread Xeon throughput (~1e9 pt/s).
+
+Beyond-paper section (parity with fig5): the same breakdown under the
+device residency manager, splitting each transfer direction into
+*paid* vs *elided* wire bytes plus the flush traffic, for both the
+``write-back`` and ``write-through`` policies.
+
+Standalone usage (the harness's ``run()`` uses the defaults):
+
+  PYTHONPATH=src python benchmarks/fig6_breakdown.py \
+      --schedule depth2 --cache-bytes $((64 << 30)) --policy write-back
 """
+
+import argparse
 
 import numpy as np
 
@@ -20,6 +32,16 @@ SHAPE = (1152, 1152, 1152)
 CPU_PTS_PER_S = 1.0e9  # 40-thread Xeon 4110, f64 25-pt
 
 LIVE_SHAPE = (96, 32, 32)
+
+# a budget that holds the compressed paper-scale working set (the
+# beyond-paper "HBM headroom" scenario fig5 also projects)
+CACHED_BUDGET = 64 * 2**30
+
+
+def _cfg(code):
+    return OOCConfig(
+        SHAPE, 8, 12, paper_code_fields(code, f32=False), dtype="float64"
+    )
 
 
 def _run_live() -> None:
@@ -45,23 +67,95 @@ def _run_live() -> None:
         )
 
 
-def run() -> None:
+def _model_row(
+    label: str,
+    cfg,
+    schedule: str,
+    cache_bytes: int,
+    policy: str,
+    sweeps: int = 1,
+) -> None:
+    """One modeled breakdown row; with residency enabled, the derived
+    column splits each direction into paid vs elided wire bytes and
+    reports the flush traffic of the eviction points."""
+    stats = {}
+    tl = sweep_timeline(
+        cfg, V100_PCIE, sweeps=sweeps, schedule=schedule,
+        cache_bytes=cache_bytes, stats=stats, policy=policy,
+    )
+    busy = tl.busy()
+    parts = " ".join(
+        f"{k}={v / sweeps:.2f}s" for k, v in sorted(busy.items())
+    )
+    detail = f"bound={tl.bounding_resource()} {parts}"
+    if cache_bytes:
+        detail += (
+            f" h2d_paid={stats['h2d_tasks']}"
+            f" h2d_elided={stats['h2d_elided']}"
+            f" elided_h2d_wire={stats['hit_wire_bytes'] / 1e9:.1f}GB"
+            f" d2h_paid={stats['d2h_tasks']}"
+            f" d2h_elided={stats['d2h_elided']}"
+            f" elided_d2h_wire="
+            f"{stats['d2h_elided_wire_bytes'] / 1e9:.1f}GB"
+            f" flushes={stats['flush_tasks']}"
+            f" flush_wire={stats['flush_wire_bytes'] / 1e9:.1f}GB"
+        )
+    emit(label, tl.makespan * 1e6 / sweeps, detail)
+
+
+def run(
+    schedule: str = "paper",
+    cache_bytes: int = 0,
+    policy: str = "write-back",
+    sweeps: int = 1,
+) -> None:
     _run_live()
+    default_args = schedule == "paper" and not cache_bytes
+    tag = "" if default_args else f"/{schedule}/{policy}"
     for code in (1, 2, 3, 4):
-        cfg = OOCConfig(
-            SHAPE, 8, 12, paper_code_fields(code, f32=False),
-            dtype="float64",
-        )
-        tl = sweep_timeline(cfg, V100_PCIE, sweeps=1, schedule="paper")
-        busy = tl.busy()
-        parts = " ".join(
-            f"{k}={v:.2f}s" for k, v in sorted(busy.items())
-        )
-        emit(
-            f"fig6/code{code}",
-            tl.makespan * 1e6,
-            f"bound={tl.bounding_resource()} {parts}",
+        _model_row(
+            f"fig6{tag}/code{code}", _cfg(code), schedule,
+            cache_bytes, policy, sweeps=sweeps,
         )
     cells = SHAPE[0] * SHAPE[1] * SHAPE[2] * 12
     emit("fig6/cpu_reference", cells / CPU_PTS_PER_S * 1e6,
          "40-thread Xeon model")
+    if default_args:
+        # beyond-paper A/B: residency breakdown, write-back vs
+        # write-through, steady state over 2 sweeps
+        for pol in ("write-through", "write-back"):
+            _model_row(
+                f"fig6/cached-{pol}/code4", _cfg(4), "depth2",
+                CACHED_BUDGET, pol, sweeps=2,
+            )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--schedule", default="paper",
+        help="issue schedule: paper | unitgrain | overlap | depth-k",
+    )
+    ap.add_argument(
+        "--cache-bytes", type=int, default=0,
+        help="device residency budget in bytes (0 = off)",
+    )
+    ap.add_argument(
+        "--policy", default="write-back",
+        choices=("write-back", "write-through"),
+        help="residency write policy (only meaningful with a budget)",
+    )
+    ap.add_argument(
+        "--sweeps", type=int, default=1,
+        help="modeled sweeps (steady-state rows need >= 2)",
+    )
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(
+        schedule=args.schedule, cache_bytes=args.cache_bytes,
+        policy=args.policy, sweeps=args.sweeps,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -2,9 +2,11 @@
 micro-benches. Prints ``name,us_per_call,derived`` CSV.
 
 ``--smoke`` runs the fig5/fig6 pipeline on a tiny grid (seconds, CPU)
-and writes a ``BENCH_smoke.json`` artifact — wire bytes, modeled sweep
-time, and unit-cache hit rate — so CI tracks the perf trajectory of
-the out-of-core engine on every push.
+and writes a ``BENCH_smoke.json`` artifact — wire bytes both
+directions, dirty-flush counts, residency peak bytes, modeled sweep
+time, and hit rate — so CI tracks the perf trajectory of the
+out-of-core engine on every push and holds the steady-state H2D- and
+D2H-elision invariants.
 """
 
 from __future__ import annotations
@@ -17,8 +19,12 @@ SMOKE_OUT = "BENCH_smoke.json"
 
 
 def smoke(out_path: str = SMOKE_OUT) -> dict:
-    """Tiny-grid fig5/fig6 sweep: live wire-byte accounting (cached vs
-    uncached executor) + modeled sweep times, as one JSON artifact."""
+    """Tiny-grid fig5/fig6 sweep: live wire-byte accounting (uncached
+    vs write-through vs write-back residency) + modeled sweep times,
+    as one JSON artifact. Asserts the two steady-state elision
+    invariants CI keeps holding: residency drives per-sweep H2D to
+    below-uncached levels, and the write-back policy drives interior
+    per-sweep D2H to exactly zero."""
     import numpy as np
 
     from repro.core.executor import AsyncExecutor
@@ -36,13 +42,18 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
         },
         "codes": {},
     }
+    engines = (
+        ("uncached", 0, "write-back"),
+        ("write-through", 1 << 30, "write-through"),
+        ("cached", 1 << 30, "write-back"),
+    )
     for code in (1, 2, 4):
         cfg = OOCConfig(shape, ndiv, bt, paper_code_fields(code))
         row = {}
-        for label, budget in (("uncached", 0), ("cached", 1 << 30)):
+        for label, budget, policy in engines:
             eng = AsyncExecutor(
                 cfg, p_prev, p_cur, vel2, schedule="depth2",
-                cache_bytes=budget,
+                cache_bytes=budget, policy=policy,
             )
             t0 = time.perf_counter()
             eng.run(bt)  # warmup sweep (cold fetches, jit compile)
@@ -50,34 +61,56 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
             eng.run((sweeps - 1) * bt)
             wall = time.perf_counter() - t0
             tot = eng.transfer_summary()
+
             # steady state = everything after the warmup sweep
-            steady_h2d = sum(
-                t.wire_bytes for t in eng.transfers
-                if t.direction == "h2d" and t.sweep > 0
-            ) // (sweeps - 1)
+            def steady(direction):
+                return sum(
+                    t.wire_bytes for t in eng.transfers
+                    if t.direction == direction and t.sweep > 0
+                ) // (sweeps - 1)
+
             st = eng.stats()
             hits = st["cache"]["hits"] - cpre["hits"]
             lookups = hits + st["cache"]["misses"] - cpre["misses"]
             row[label] = {
+                "policy": policy,
                 "wall_s": round(wall, 4),
                 "h2d_wire": tot["h2d_wire"],
                 "d2h_wire": tot["d2h_wire"],
-                "steady_h2d_wire_per_sweep": steady_h2d,
+                "steady_h2d_wire_per_sweep": steady("h2d"),
+                "steady_d2h_wire_per_sweep": steady("d2h"),
                 "steady_cache_hit_rate": round(
                     hits / lookups if lookups else 0.0, 4
                 ),
+                "d2h_elided_wire": st["cache"]["d2h_elided_wire_bytes"],
+                "dirty_flushes": st["cache"]["flushes"],
+                "dirty_bytes": st["cache"]["dirty_bytes"],
+                "peak_bytes": st["cache_peak_bytes"],
                 "max_inflight": st["max_inflight"],
             }
-        # the acceptance invariant CI keeps holding: nonzero budget ->
-        # strictly fewer steady-state h2d wire bytes per sweep
+        # invariant 1 (PR 2): residency -> strictly fewer steady-state
+        # h2d wire bytes per sweep than fetch-every-sweep
         assert (
             row["cached"]["steady_h2d_wire_per_sweep"]
             < row["uncached"]["steady_h2d_wire_per_sweep"]
         ), (code, row)
+        # invariant 2 (PR 3): write-back commits interior writebacks on
+        # device -> steady-state per-sweep d2h wire bytes are ZERO when
+        # the working set fits (and nothing flushed mid-run)
+        assert row["cached"]["steady_d2h_wire_per_sweep"] == 0, (
+            code, row,
+        )
+        assert row["cached"]["dirty_flushes"] == 0, (code, row)
+        # A/B sanity: write-through keeps paying the full d2h
+        assert (
+            row["write-through"]["steady_d2h_wire_per_sweep"]
+            == row["uncached"]["steady_d2h_wire_per_sweep"]
+            > 0
+        ), (code, row)
         mstats = {}
         tl = sweep_timeline(
             cfg, V100_PCIE, sweeps=sweeps, schedule="depth2",
-            cache_bytes=1 << 30, stats=mstats,
+            cache_bytes=1 << 30, stats=mstats, policy="write-back",
         )
         base = sweep_timeline(
             cfg, V100_PCIE, sweeps=sweeps, schedule="paper"
@@ -86,6 +119,8 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
             "sweep_time_s": round(tl.makespan / sweeps, 6),
             "paper_sweep_time_s": round(base.makespan / sweeps, 6),
             "h2d_elided": mstats["h2d_elided"],
+            "d2h_elided": mstats["d2h_elided"],
+            "flush_tasks": mstats["flush_tasks"],
             "model_hit_rate": round(mstats["hit_rate"], 4),
         }
         result["codes"][f"code{code}"] = row

@@ -31,21 +31,38 @@ that writeback — the fetch-after-writeback hazard the multi-sweep
 graph encodes as dependency edges instead of a global barrier. The
 final drain happens in ``run()``/``finish()``/``gather()``.
 
-The device-resident unit cache (``repro.core.unitcache.UnitCache``,
-byte-budgeted LRU over compressed payloads) short-circuits the fetch
-path: writebacks deposit their on-device ``Compressed`` handle (or raw
-device array) keyed by the new version *before* the host
-materialization, and read-only fields deposit on first fetch, so in
-steady state a generous budget drives per-sweep ``h2d_wire`` to zero.
-Cache hits emit no ``h2d`` transfer record. ``cache_bytes=0`` (the
-default) disables the cache and reduces to fetch-every-sweep.
+The device residency manager (``repro.core.unitcache.
+DeviceResidencyManager``, dirty-tracking byte-budgeted LRU) owns both
+wire directions. The fetch path is PR 2's: writebacks deposit their
+on-device ``Compressed`` handle (or raw device array) keyed by the new
+version *before* any host materialization, read-only fields deposit on
+first fetch, and a fetch whose current version is resident elides the
+H2D entirely (no transfer record). Under ``policy="write-back"`` (the
+default) the write path is elided symmetrically: a parked writeback
+whose dirty deposit was stored never materializes on drain — its
+``d2h`` becomes a **version commit with no host copy**
+(``HostUnitStore.commit_device``), and the bytes cross the link only
+when residency is lost:
+
+* **flush-on-evict** — a dirty LRU victim is materialized immediately
+  (``store.put`` + a ``flush`` transfer record), *before* anything can
+  refetch it: the fetch-after-writeback hazard holds across pending
+  flushes because a fetch either hits the dirty entry or finds the
+  flushed (current) host bytes;
+* **flush-on-gather / flush-on-checkpoint** — ``flush()`` drains every
+  dirty entry to the host store in deterministic LRU order;
+  ``gather()`` calls it, and any checkpoint of the host store must.
+
+``policy="write-through"`` reproduces PR 2 exactly (every writeback
+materializes on drain) for A/B runs; ``cache_bytes=0`` (the default)
+disables residency and reduces to fetch-and-write-every-sweep.
 
 Numerics: the executor issues the *same* JAX ops on the same values as
 the synchronous engine — assembly, temporal-blocked stencil, fixed-rate
-codec — and the host round-trip it elides on a cache hit is
-byte-preserving, so its output is bit-identical (tests/test_executor.py)
-no matter how the overlap interleaves materialization or how many
-transfers the cache elides.
+codec — and the host round-trips it elides (cache-hit fetches,
+device-committed writebacks) are byte-preserving, so its output is
+bit-identical (tests/test_executor.py) no matter how the overlap
+interleaves materialization or how many transfers residency elides.
 """
 
 from __future__ import annotations
@@ -64,16 +81,35 @@ from repro.core.taskgraph import (
     Transfer,
     build_sweep_tasks,
     get_schedule,
+    summarize_transfers,
 )
-from repro.core.unitcache import UnitCache
+from repro.core.unitcache import DeviceResidencyManager, Entry
 from repro.kernels.stencil import ops as stencil_ops
 from repro.kernels.zfp import ops as zfp_ops
 from repro.kernels.zfp.ref import Compressed
 
 UnitKey = Tuple[str, Tuple[str, int]]  # (field, (kind, idx))
 
-# one parked visit: (producing sweep no, [(task, value, raw)])
-_Parked = Tuple[int, List[Tuple[Task, object, int]]]
+# one parked visit: (producing sweep, [(task, value, raw, version)])
+_Parked = Tuple[int, List[Tuple[Task, object, int, int]]]
+
+
+def _payload_nbytes(value) -> int:
+    """On-wire bytes of a device payload (what a D2H of it would move) —
+    matches the analytic ``taskgraph.unit_wire_bytes`` the model uses."""
+    if isinstance(value, Compressed):
+        return value.nbytes()
+    return int(value.size) * value.dtype.itemsize
+
+
+def _payload_raw_bytes(value) -> int:
+    """Uncompressed bytes a device payload represents."""
+    if isinstance(value, Compressed):
+        n = 1
+        for s in value.shape:
+            n *= int(s)
+        return n * np.dtype(value.dtype).itemsize
+    return int(value.size) * value.dtype.itemsize
 
 
 class AsyncExecutor:
@@ -89,6 +125,7 @@ class AsyncExecutor:
         vel2: np.ndarray,
         schedule: Union[str, Schedule] = "depth2",
         cache_bytes: int = 0,
+        policy: str = "write-back",
     ):
         self.cfg = cfg
         self.plan = cfg.plan
@@ -100,7 +137,7 @@ class AsyncExecutor:
         self.depth = self.schedule.window or 2
         self.store = HostUnitStore(cfg)
         self.store.seed({"p_prev": p_prev, "p_cur": p_cur, "vel2": vel2})
-        self.cache = UnitCache(cache_bytes)
+        self.cache = DeviceResidencyManager(cache_bytes, policy=policy)
         self.transfers: List[Transfer] = []
         self.sweeps_done = 0
         self.max_inflight = 0  # peak block visits with pending D2H
@@ -128,11 +165,29 @@ class AsyncExecutor:
     # window management
     # ------------------------------------------------------------------
     def _drain_one(self) -> None:
-        """Materialize the oldest visit's writebacks (blocks on D2H)."""
+        """Retire the oldest visit's writebacks.
+
+        Write-through: every writeback materializes (blocks on D2H).
+        Write-back: a writeback whose payload is still dirty-resident
+        commits its version with NO host copy (the d2h the wire never
+        sees); one whose payload was evicted has already been flushed
+        (the flush committed its newest version, so this drain is a
+        no-op); only a payload that never gained residency (deposit
+        refused) pays here.
+        """
         sweep_no, parked = self._pending.popleft()
-        for task, value, raw in parked:
+        for task, value, raw, ver in parked:
             kind, idx = task.unit
-            wire = self.store.put(task.field, kind, idx, value)
+            if self.cache.enabled and self.cache.write_back:
+                if self.store.version_of(task.field, kind, idx) >= ver:
+                    continue  # an eviction flush already committed this
+                ent = self.cache.peek((task.field, task.unit))
+                if ent is not None and ent.dirty and ent.version >= ver:
+                    self.store.commit_device(task.field, kind, idx, ver)
+                    continue
+            wire = self.store.put(
+                task.field, kind, idx, value, version=ver
+            )
             self.transfers.append(Transfer(
                 "d2h", task.field, task.unit, raw, wire,
                 sweep_no, task.block,
@@ -183,7 +238,9 @@ class AsyncExecutor:
         if self.cache.enabled and self.cfg.fields[task.field].role != "rw":
             # never written back: deposit the fetched payload so later
             # sweeps hit (rw fields deposit at writeback instead)
-            self.cache.deposit(key, ver, dev, wire)
+            res = self.cache.deposit(key, ver, dev, wire)
+            for ekey, eent in res.flushes:
+                self._flush_entry(ekey, eent, task.block)
         self.transfers.append(Transfer(
             "h2d", task.field, task.unit, raw, wire,
             self.sweeps_done, task.block,
@@ -278,11 +335,31 @@ class AsyncExecutor:
             for t, c in zip(ts, encoded):
                 self._outvals[(t.field, t.unit)] = c
 
+    def _flush_entry(
+        self, key: UnitKey, ent: Entry, block: int, mark: bool = False
+    ) -> None:
+        """Materialize one dirty payload to the host store and record
+        the flush transfer. ``mark`` (the explicit-flush path) clears
+        the entry's dirty bit AFTER the put, so a failed put leaves it
+        dirty for retry; evicted entries (``mark=False``) were already
+        accounted by the manager when they were popped."""
+        field, (kind, idx) = key
+        wire = self.store.put(field, kind, idx, ent.value,
+                              version=ent.version)
+        if mark:
+            self.cache.mark_flushed(key)
+        self.transfers.append(Transfer(
+            "d2h", field, (kind, idx), _payload_raw_bytes(ent.value),
+            wire, self.sweeps_done, block, flush=True,
+        ))
+
     def _park_writebacks(self, btasks: List[Task]) -> None:
-        """Bump unit versions, deposit the on-device payloads into the
-        cache (so the next sweep can hit before the D2H even lands),
-        and park the d2h tasks in the window."""
-        parked: List[Tuple[Task, object, int]] = []
+        """Bump unit versions, deposit the on-device payloads into
+        residency (dirty under write-back, so the d2h can commit
+        without a host copy; the next sweep can hit either way), and
+        park the d2h tasks in the window. Dirty LRU victims of the
+        deposits flush here — the eviction point."""
+        parked: List[Tuple[Task, object, int, int]] = []
         for t in (t for t in btasks if t.kind == "d2h"):
             key = (t.field, t.unit)
             val = self._outvals.pop(key)
@@ -290,12 +367,19 @@ class AsyncExecutor:
             ver = self._ver.get(key, 0) + 1
             self._ver[key] = ver
             if self.cache.enabled:
-                if isinstance(val, Compressed):
-                    nbytes = val.nbytes()
-                else:
-                    nbytes = int(val.size) * val.dtype.itemsize
-                self.cache.deposit(key, ver, val, nbytes)
-            parked.append((t, val, raw))
+                nbytes = _payload_nbytes(val)
+                res = self.cache.deposit(key, ver, val, nbytes,
+                                         dirty=True)
+                for ekey, eent in res.flushes:
+                    self._flush_entry(ekey, eent, t.block)
+                if res.stored and self.cache.write_back:
+                    # payload sizes are constant across versions
+                    # (fixed-rate codec), so a stored deposit can never
+                    # be displaced by a refusal: this writeback will
+                    # never pay its own D2H — account the elision now,
+                    # in lockstep with the graph builder
+                    self.cache.note_d2h_elided(nbytes)
+            parked.append((t, val, raw, ver))
         if parked:
             self._pending.append((self.sweeps_done, parked))
         self.max_inflight = max(self.max_inflight, len(self._pending))
@@ -334,8 +418,25 @@ class AsyncExecutor:
         self.sweeps_done += 1
 
     def finish(self) -> None:
-        """Drain the window: host store consistent with all sweeps."""
+        """Drain the window: every issued writeback is *committed* —
+        on host (write-through / lost residency) or on device
+        (write-back commits). Dirty-resident payloads stay resident;
+        call ``flush()`` (or ``gather()``, which does) before any
+        host-side read of the store."""
         self._drain_all()
+
+    def flush(self) -> int:
+        """Flush-on-demand: materialize every dirty-resident payload to
+        the host store, oldest (LRU) first — the deterministic flush
+        order. Entries stay resident (clean) so later sweeps still hit.
+        ``gather()`` calls this; **checkpointing the host store must
+        too**. Returns the number of units flushed. A failed put leaves
+        its entry dirty, so a retry flushes exactly the remainder."""
+        n = 0
+        for key, ent in self.cache.dirty_entries():
+            self._flush_entry(key, ent, -1, mark=True)
+            n += 1
+        return n
 
     def run(self, total_steps: int) -> None:
         assert total_steps % self.cfg.bt == 0
@@ -346,14 +447,11 @@ class AsyncExecutor:
     # ------------------------------------------------------------------
     def gather(self, name: str) -> np.ndarray:
         self.finish()
+        self.flush()
         return self.store.gather(name)
 
     def transfer_summary(self) -> Dict[str, int]:
-        tot = {"h2d_raw": 0, "h2d_wire": 0, "d2h_raw": 0, "d2h_wire": 0}
-        for t in self.transfers:
-            tot[f"{t.direction}_raw"] += t.raw_bytes
-            tot[f"{t.direction}_wire"] += t.wire_bytes
-        return tot
+        return summarize_transfers(self.transfers)
 
     def stats(self) -> Dict[str, object]:
         return {
@@ -361,7 +459,9 @@ class AsyncExecutor:
             "max_inflight": self.max_inflight,
             "sweeps": self.sweeps_done,
             "pending": len(self._pending),
+            "policy": self.cache.policy,
             "cache": self.cache.stats.as_dict(),
             "cache_bytes_used": self.cache.bytes_used,
             "cache_peak_bytes": self.cache.peak_bytes,
+            "cache_dirty_bytes": self.cache.dirty_bytes,
         }

@@ -44,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blocks import BlockPlan
-from repro.core.taskgraph import Transfer
+from repro.core.taskgraph import Transfer, summarize_transfers
 from repro.kernels.stencil import ops as stencil_ops
 from repro.kernels.zfp import ops as zfp_ops
 from repro.kernels.zfp.ref import Compressed
@@ -120,30 +120,84 @@ class HostUnitStore:
         self._units: Dict[Tuple[str, str, int], object] = {}
         # writebacks since seeding, per unit (seeded units are v0) —
         # the executor's fetch-after-writeback hazard tracking and the
-        # device unit cache both key validity on these counters
+        # device unit cache both key validity on these counters. Under
+        # the write-back residency policy a version can be *committed
+        # on device* without a host copy: ``_versions`` then runs ahead
+        # of ``_host_versions`` until a flush ``put``s the payload.
         self._versions: Dict[Tuple[str, str, int], int] = {}
+        self._host_versions: Dict[Tuple[str, str, int], int] = {}
 
-    def put(self, field: str, kind: str, idx: int, value) -> int:
-        """Store; returns wire bytes (what crossed the link)."""
+    def put(
+        self, field: str, kind: str, idx: int, value,
+        version: Optional[int] = None,
+    ) -> int:
+        """Store; returns wire bytes (what crossed the link).
+
+        ``version`` pins the committed version this payload realizes
+        (deferred writebacks and residency flushes); without it the
+        counter bumps by one (the synchronous engine's in-order path).
+        Either way the host copy is current afterwards.
+        """
         key = (field, kind, idx)
-        self._versions[key] = self._versions.get(key, -1) + 1
+        if version is None:
+            version = self._versions.get(key, -1) + 1
+        assert version >= self._host_versions.get(key, 0), key
+        # store the payload BEFORE advancing the version maps: a put
+        # that fails mid-copy must not leave host_current() true over
+        # stale bytes (the flush-retry contract relies on this order)
         if isinstance(value, Compressed):
             host = Compressed(
                 np.asarray(value.payload), np.asarray(value.emax),
                 value.shape, value.planes, value.ndim_spatial, value.dtype,
             )
+            wire = host.nbytes()
             self._units[key] = host
-            return host.nbytes()
-        arr = np.asarray(value)
-        self._units[key] = arr
-        return arr.nbytes
+        else:
+            arr = np.asarray(value)
+            wire = arr.nbytes
+            self._units[key] = arr
+        self._versions[key] = max(version, self._versions.get(key, 0))
+        self._host_versions[key] = version
+        return wire
 
     def get(self, field: str, kind: str, idx: int):
+        # a stale host payload must never be served: under write-back
+        # the committed version lives on device until flushed, so every
+        # host read path (stage, gather, checkpointing) has to flush
+        # first — this guard makes forgetting that loud, for raw units
+        # (which skip stage()) as much as compressed ones
+        assert self.host_current(field, kind, idx), (field, kind, idx)
         return self._units[(field, kind, idx)]
 
     def version_of(self, field: str, kind: str, idx: int) -> int:
-        """Committed writebacks since seeding (0 = still the seed)."""
+        """Committed writebacks since seeding (0 = still the seed).
+        Counts device-only commits too — see ``host_current``."""
         return self._versions.get((field, kind, idx), 0)
+
+    def host_version_of(self, field: str, kind: str, idx: int) -> int:
+        """Version of the payload actually held on host."""
+        return self._host_versions.get((field, kind, idx), 0)
+
+    def host_current(self, field: str, kind: str, idx: int) -> bool:
+        """Whether the host payload realizes the committed version.
+        False only under write-back residency, between a device-side
+        version commit and its flush."""
+        key = (field, kind, idx)
+        return (
+            self._host_versions.get(key, 0) == self._versions.get(key, 0)
+        )
+
+    def commit_device(
+        self, field: str, kind: str, idx: int, version: int
+    ) -> None:
+        """Commit ``version`` with the payload resident on device only
+        (the write-back elision): no host copy is made, so the host
+        entry is stale until a flush ``put``s it. The caller (the
+        executor's drain) guarantees the payload stays resident dirty
+        until then."""
+        key = (field, kind, idx)
+        assert version > self._versions.get(key, 0), key
+        self._versions[key] = version
 
     def seed(self, full: Dict[str, np.ndarray]) -> None:
         """Initial decomposition of full fields into host units.
@@ -172,6 +226,10 @@ class HostUnitStore:
         ``device_value`` is a device array or an on-device
         ``Compressed`` awaiting a decompress task.
         """
+        # a stale host copy must never cross the link: write-back
+        # keeps the invariant "committed-ahead-of-host implies
+        # dirty-resident", so every real fetch sees current bytes
+        assert self.host_current(field, kind, idx), (field, kind, idx)
         stored = self.get(field, kind, idx)
         if isinstance(stored, Compressed):
             dev = Compressed(
@@ -343,8 +401,4 @@ class OutOfCoreWave:
 
     # ------------------------------------------------------------------
     def transfer_summary(self) -> Dict[str, int]:
-        tot = {"h2d_raw": 0, "h2d_wire": 0, "d2h_raw": 0, "d2h_wire": 0}
-        for t in self.transfers:
-            tot[f"{t.direction}_raw"] += t.raw_bytes
-            tot[f"{t.direction}_wire"] += t.wire_bytes
-        return tot
+        return summarize_transfers(self.transfers)

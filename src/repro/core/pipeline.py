@@ -167,16 +167,22 @@ def sweep_timeline(
     schedule: Union[str, Schedule] = "paper",
     cache_bytes: int = 0,
     stats: Optional[Dict[str, object]] = None,
+    policy: str = "write-back",
 ) -> Timeline:
     """Replay ``sweeps`` sweeps of ``cfg`` under ``schedule`` on ``hw``.
 
-    ``cache_bytes`` models the executor's device-resident unit cache:
+    ``cache_bytes`` models the executor's device residency manager:
     fetches whose current version is still resident emit no h2d task,
-    so the replay prices exactly the transfers the live engine pays
-    (``stats`` receives the modeled hit/elision counters)."""
+    and under ``policy="write-back"`` (default) resident writebacks
+    emit no d2h task either — flush d2h tasks appear at the eviction
+    points where dirty payloads lose residency. The replay therefore
+    prices exactly the transfers the live engine pays in both
+    directions (``stats`` receives the modeled hit/elision/flush
+    counters); ``policy="write-through"`` reproduces the
+    materialize-every-writeback timeline for A/B comparison."""
     return simulate(
         build_sweep_tasks(
             cfg, sweeps=sweeps, schedule=schedule,
-            cache_bytes=cache_bytes, stats=stats,
+            cache_bytes=cache_bytes, stats=stats, policy=policy,
         ), hw
     )

@@ -21,10 +21,14 @@ Multi-sweep graphs are continuous: instead of a sweep barrier, every
 unit carries a version counter (one bump per writeback) and sweep
 *s+1*'s fetch of a unit depends on the d2h task that committed its
 current version — the fetch-after-writeback hazard as dependency
-edges. ``cache_bytes`` additionally models the executor's
-device-resident unit cache (LRU over compressed payloads): resident
-fetches emit no h2d task at all, so the replay prices exactly the
-elided transfers the live engine skips.
+edges. ``cache_bytes`` additionally models the executor's device
+residency manager (dirty-tracking LRU over on-device payloads):
+resident fetches emit no h2d task at all, and under the default
+``policy="write-back"`` a writeback whose dirty deposit is stored
+emits no d2h task either — its version commits on device, and flush
+d2h tasks appear exactly where dirty entries lose residency
+(flush-on-evict). The replay therefore prices exactly the transfers
+the live engine pays in both directions.
 
 Schedules are pluggable strategies shared by the replay and the live
 executor:
@@ -66,6 +70,25 @@ class Transfer:
     wire_bytes: int
     sweep: int
     block: int
+    # write-back residency flush (evict/gather/checkpoint) rather than
+    # an in-order writeback
+    flush: bool = False
+
+
+def summarize_transfers(transfers: List[Transfer]) -> Dict[str, int]:
+    """Per-direction raw/wire byte totals of a transfer log, with the
+    write-back flush share of d2h broken out. Shared by both engines so
+    their summaries stay dict-comparable."""
+    tot = {
+        "h2d_raw": 0, "h2d_wire": 0, "d2h_raw": 0, "d2h_wire": 0,
+        "d2h_flush_wire": 0,
+    }
+    for t in transfers:
+        tot[f"{t.direction}_raw"] += t.raw_bytes
+        tot[f"{t.direction}_wire"] += t.wire_bytes
+        if t.flush:
+            tot["d2h_flush_wire"] += t.wire_bytes
+    return tot
 
 
 @dataclass
@@ -84,6 +107,9 @@ class Task:
     # unit version this task reads (h2d/decompress) or produces
     # (compress/d2h); versions count writebacks since seeding
     version: int = 0
+    # d2h task that is a residency flush (dirty eviction) rather than
+    # an in-order writeback
+    flush: bool = False
 
 
 @dataclass(frozen=True)
@@ -159,6 +185,7 @@ def build_sweep_tasks(
     schedule: Union[str, Schedule] = "paper",
     cache_bytes: int = 0,
     stats: Optional[Dict[str, object]] = None,
+    policy: str = "write-back",
 ) -> List[Task]:
     """Tasks for ``sweeps`` consecutive sweeps of the out-of-core engine,
     mirroring the engines' fetch/compute/writeback structure (units
@@ -176,14 +203,20 @@ def build_sweep_tasks(
     while the tail of the previous sweep is still computing or
     writing back.
 
-    ``cache_bytes`` models the executor's device-resident unit cache
-    (``repro.core.unitcache.UnitCache``): writebacks deposit their
-    payload, read-only fields deposit on first fetch, and a fetch whose
-    current version is still resident emits *no* h2d task (compressed
-    units keep their decompress task, now depending on the depositing
-    codec task). The replay therefore prices exactly the transfers the
-    live executor performs. ``stats``, if given, is filled with the
-    modeled cache counters and elision totals.
+    ``cache_bytes`` models the executor's device residency manager
+    (``repro.core.unitcache.DeviceResidencyManager``): writebacks
+    deposit their payload, read-only fields deposit on first fetch, and
+    a fetch whose current version is still resident emits *no* h2d task
+    (compressed units keep their decompress task, now depending on the
+    depositing codec task). Under ``policy="write-back"`` (default) the
+    write direction is elided too: a writeback whose dirty deposit was
+    stored emits *no* d2h task (its version commits on device), and
+    flush d2h tasks are emitted exactly at the eviction points where a
+    dirty entry loses residency — so the replay prices both directions
+    the live executor actually pays, including the flush traffic of an
+    eviction regime. ``policy="write-through"`` reproduces the PR 2
+    behavior (every writeback materializes). ``stats``, if given, is
+    filled with the modeled residency counters and elision totals.
     """
     sched = get_schedule(schedule)
     plan = cfg.plan
@@ -191,21 +224,36 @@ def build_sweep_tasks(
     itemsize = 4 if cfg.dtype == "float32" else 8
     plane_bytes = y * x * itemsize
     tasks: List[Task] = []
-    cache = UnitCache(cache_bytes)
+    cache = UnitCache(cache_bytes, policy=policy)
     version: Dict[Tuple[str, Tuple[str, int]], int] = {}
     # tid of the d2h producing each unit's current host version
     writeback_of: Dict[Tuple[str, Tuple[str, int]], str] = {}
     # tid of the compute task that deposited the cached payload
     deposit_of: Dict[Tuple[str, Tuple[str, int]], str] = {}
-    h2d_tasks = h2d_elided = 0
+    h2d_tasks = h2d_elided = d2h_tasks = 0
 
     def add(tid, resource, kind, amount, deps, block, *, sync=False,
-            field="", unit=None, sweep=0, ver=0):
+            field="", unit=None, sweep=0, ver=0, flush=False):
         tasks.append(Task(
             tid, resource, kind, amount, tuple(deps), block,
             sync=sync and sched.codec_sync, field=field, unit=unit,
-            sweep=sweep, version=ver,
+            sweep=sweep, version=ver, flush=flush,
         ))
+        return tid
+
+    def flush_task(ekey, eent, pre, block, s):
+        """Flush-on-evict: the dirty entry ``eent`` lost residency, so
+        its D2H happens HERE, before anything can refetch it (the
+        fetch-after-writeback hazard across a pending flush)."""
+        ef, (ekind, eidx) = ekey
+        fdep = deposit_of.get(ekey)
+        tid = add(
+            f"{pre}.flush.{ef}.{ekind}{eidx}", "d2h", "d2h",
+            eent.nbytes, (fdep,) if fdep else (), block,
+            field=ef, unit=(ekind, eidx), sweep=s, ver=eent.version,
+            flush=True,
+        )
+        writeback_of[ekey] = tid
         return tid
 
     def unit_span(kind: str, idx: int) -> Tuple[int, int]:
@@ -233,6 +281,7 @@ def build_sweep_tasks(
                 if prior is not None:
                     window_dep = (prior,)
             h2d_ids, dec_ids = [], []
+            fetch_flushes: List[str] = []
             for name, spec in cfg.fields.items():
                 for kind, idx in plan.fetch_units(i):
                     key = (name, (kind, idx))
@@ -267,10 +316,14 @@ def build_sweep_tasks(
                     h2d_ids.append(tid)
                     if spec.role != "rw" and cache.enabled:
                         # never written back: cache the fetched payload
-                        cache.deposit(
+                        res = cache.deposit(
                             key, ver, None, exact_nbytes(spec, kind, idx)
                         )
                         deposit_of[key] = tid
+                        for ekey, eent in res.flushes:
+                            fetch_flushes.append(
+                                flush_task(ekey, eent, pre, i, s)
+                            )
                     if spec.compressed:
                         dec_ids.append(add(
                             f"{pre}.dec.{name}.{kind}{idx}", "compute",
@@ -291,7 +344,7 @@ def build_sweep_tasks(
                 f"{pre}.stencil", "compute", "stencil", cells, deps, i,
                 sweep=s,
             )
-            last_d2h = prev_compute
+            last_d2h = fetch_flushes[-1] if fetch_flushes else prev_compute
             for name, spec in cfg.fields.items():
                 if spec.role != "rw":
                     continue
@@ -312,11 +365,23 @@ def build_sweep_tasks(
                     if cache.enabled:
                         # deposited before (independent of) the host
                         # materialization — the next sweep can hit even
-                        # while this d2h is still in flight
-                        cache.deposit(
-                            key, ver, None, exact_nbytes(spec, kind, idx)
+                        # while this d2h is still in flight. Write-back
+                        # deposits dirty: a stored deposit's d2h never
+                        # happens as its own task (the version commits
+                        # on device; the bytes move only in a flush).
+                        res = cache.deposit(
+                            key, ver, None,
+                            exact_nbytes(spec, kind, idx), dirty=True,
                         )
                         deposit_of[key] = dep[0]
+                        for ekey, eent in res.flushes:
+                            last_d2h = flush_task(ekey, eent, pre, i, s)
+                        if res.stored and cache.write_back:
+                            cache.note_d2h_elided(
+                                exact_nbytes(spec, kind, idx)
+                            )
+                            continue
+                    d2h_tasks += 1
                     last_d2h = add(
                         f"{pre}.d2h.{name}.{kind}{idx}", "d2h", "d2h",
                         wire, dep, i,
@@ -326,19 +391,22 @@ def build_sweep_tasks(
             drain_of_visit[visit] = last_d2h
     if stats is not None:
         stats.update(cache.stats.as_dict())
-        # elided wire bytes are exactly the cache's hit_wire_bytes
-        # (deposits use exact payload sizes) — one accounting, shared
-        # with the live executor's CacheStats
+        # elided wire bytes are exactly the manager's hit_wire_bytes /
+        # d2h_elided_wire_bytes (deposits use exact payload sizes) —
+        # one accounting, shared with the live executor's CacheStats
         stats.update({
             "h2d_tasks": h2d_tasks,
             "h2d_elided": h2d_elided,
+            "d2h_tasks": d2h_tasks,
+            "flush_tasks": cache.stats.flushes,
             "cache_peak_bytes": cache.peak_bytes,
         })
     return tasks
 
 
 def wire_totals(tasks: List[Task]) -> Dict[str, float]:
-    """Modeled wire bytes per link direction (h2d/d2h task amounts)."""
+    """Modeled wire bytes per link direction (h2d/d2h task amounts;
+    residency flushes are d2h tasks and count toward d2h)."""
     out = {"h2d": 0.0, "d2h": 0.0}
     for t in tasks:
         if t.kind in out:

@@ -1,39 +1,59 @@
-"""Device-resident compressed-unit cache (byte-budgeted LRU).
+"""Device residency manager: dirty-tracking LRU over on-device units.
 
-The out-of-core executor re-fetches every storage unit from the host on
-every sweep, even though sweep *s+1* wants exactly the bytes sweep *s*
-just compressed on device and shipped out. Keeping those on-device
-payloads resident turns the steady-state fetch into a no-op: a unit
-whose *current version* is still cached skips the H2D transfer entirely
-(compressed units still pay the on-device decompress; raw units pay
-nothing).
+PR 2's read-only unit cache drove steady-state **H2D** to zero: a unit
+whose current version is still resident skips the fetch entirely. This
+module now owns *both* transfer directions. Under the default
+``write-back`` policy a writeback **deposits its on-device payload as
+dirty instead of materializing to host**: the D2H the synchronous
+engine would pay becomes a version commit with no host copy, and the
+bytes only cross the link when residency is actually lost —
 
-The cache is deliberately dumb and deterministic — plain LRU over unit
-keys with a byte budget — because the *same* policy is replayed by the
-task-graph builder (``repro.core.taskgraph.build_sweep_tasks`` with
-``cache_bytes``) to model the elided transfers in the Fig. 5/6
-timelines. Determinism is the contract: builder and live executor must
-agree on every hit/miss/eviction given the same budget and access
+* **flush-on-evict**: LRU eviction of a dirty entry returns it to the
+  caller (``DepositResult.flushes``), who must materialize it to the
+  host store before anything can fetch that unit again;
+* **flush-on-gather / flush-on-checkpoint**: any host-side read of the
+  field (``AsyncExecutor.gather``) or checkpoint of the host store must
+  first drain ``dirty_entries()`` — oldest (LRU) first, so the flush
+  order is deterministic and reproducible by the task-graph model.
+
+``policy="write-through"`` reproduces PR 2 exactly (every deposit is
+clean, every writeback materializes) for A/B benchmarking; a
+``budget_bytes`` of 0 disables residency entirely and reduces both
+policies to the fetch-every-sweep / write-every-sweep engine.
+
+The manager stays deliberately dumb and deterministic — plain LRU under
+a byte budget, pure policy, no JAX — because the *same* object is
+replayed by the task-graph builder (``repro.core.taskgraph.
+build_sweep_tasks`` with ``cache_bytes``/``policy``) to model the
+elided transfers and the flush points in the Fig. 5/6 timelines.
+Determinism is the contract: builder and live executor must agree on
+every hit/miss/eviction/flush given the same budget, policy and access
 order, which the tests assert transfer-by-transfer.
 
 Entries are versioned: ``deposit`` records the unit version the payload
 corresponds to and ``lookup`` only hits when the cached version equals
-the requested (current) one. A stale entry is dropped on lookup so its
-bytes are reclaimed immediately. ``budget_bytes=0`` disables caching
-(every lookup misses, every deposit is refused) — the executor then
-reduces exactly to the fetch-every-sweep behavior.
+the requested (current) one. Payload sizes are constant across versions
+(fixed-rate codec), so a deposit that was stored once is never later
+refused — the invariant that lets both consumers decide "this writeback
+will never pay its own D2H" at deposit time (``note_d2h_elided``).
+Replacing a key's dirty entry with a newer version drops the old
+payload silently: the superseded bytes can never be needed again (the
+host only ever serves the *newest* committed version, whose data is
+either resident here or still parked in the executor's window).
 
-The cache is policy only: it never touches JAX. Values are opaque
-(device arrays / ``Compressed`` handles in the executor, ``None`` in
-the graph builder's model), and ``nbytes`` is supplied by the caller so
-the model can use exact analytic payload sizes.
+Values are opaque (device arrays / ``Compressed`` handles in the
+executor, ``None`` in the graph builder's model), and ``nbytes`` is
+supplied by the caller so the model can use exact analytic payload
+sizes.
 """
 
 from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Dict, Hashable, Tuple
+from typing import Any, Dict, Hashable, List, Optional, Tuple, Union
+
+POLICIES = ("write-back", "write-through")
 
 
 @dataclass
@@ -43,7 +63,13 @@ class CacheStats:
     deposits: int = 0
     refusals: int = 0  # deposits rejected (entry larger than budget)
     evictions: int = 0
-    hit_wire_bytes: int = 0  # link bytes elided by hits
+    hit_wire_bytes: int = 0  # h2d link bytes elided by hits
+    # write-back accounting
+    d2h_elided: int = 0  # writebacks committed on device, no host copy
+    d2h_elided_wire_bytes: int = 0  # d2h link bytes those commits skipped
+    flushes: int = 0  # dirty payloads materialized (evict/gather/ckpt)
+    flush_wire_bytes: int = 0  # link bytes the flushes paid
+    dirty_bytes: int = 0  # resident bytes currently newer than host
 
     @property
     def lookups(self) -> int:
@@ -53,7 +79,7 @@ class CacheStats:
     def hit_rate(self) -> float:
         return self.hits / self.lookups if self.lookups else 0.0
 
-    def as_dict(self) -> Dict[str, float]:
+    def as_dict(self) -> Dict[str, Union[int, float]]:
         return {
             "hits": self.hits,
             "misses": self.misses,
@@ -61,26 +87,52 @@ class CacheStats:
             "refusals": self.refusals,
             "evictions": self.evictions,
             "hit_wire_bytes": self.hit_wire_bytes,
+            "d2h_elided": self.d2h_elided,
+            "d2h_elided_wire_bytes": self.d2h_elided_wire_bytes,
+            "flushes": self.flushes,
+            "flush_wire_bytes": self.flush_wire_bytes,
+            "dirty_bytes": self.dirty_bytes,
             "hit_rate": self.hit_rate,
         }
 
 
 @dataclass
-class _Entry:
+class Entry:
     version: int
     value: Any
     nbytes: int
+    dirty: bool = False
 
 
 @dataclass
-class UnitCache:
-    """LRU cache of on-device unit payloads under a byte budget."""
+class DepositResult:
+    """Outcome of a ``deposit``: whether the payload is now resident,
+    and which dirty entries its admission evicted — the caller MUST
+    materialize those to the host store (flush-on-evict) or their data
+    is lost."""
+
+    stored: bool
+    flushes: List[Tuple[Hashable, Entry]] = field(default_factory=list)
+
+
+@dataclass
+class DeviceResidencyManager:
+    """Byte-budgeted LRU over on-device unit payloads owning both
+    transfer directions: read residency (H2D elision) and, under
+    ``policy="write-back"``, dirty write residency (D2H elision with
+    ordered flush)."""
 
     budget_bytes: int = 0
+    policy: str = "write-back"
     stats: CacheStats = field(default_factory=CacheStats)
 
     def __post_init__(self):
-        self._entries: "OrderedDict[Hashable, _Entry]" = OrderedDict()
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown residency policy {self.policy!r}; "
+                f"expected one of {POLICIES}"
+            )
+        self._entries: "OrderedDict[Hashable, Entry]" = OrderedDict()
         self.bytes_used = 0
         self.peak_bytes = 0
 
@@ -91,16 +143,31 @@ class UnitCache:
     def enabled(self) -> bool:
         return self.budget_bytes > 0
 
+    @property
+    def write_back(self) -> bool:
+        return self.policy == "write-back"
+
+    @property
+    def dirty_bytes(self) -> int:
+        return self.stats.dirty_bytes
+
     # ------------------------------------------------------------------
     def lookup(self, key: Hashable, version: int) -> Tuple[bool, Any]:
         """``(hit, value)`` for the unit at ``version``; hits refresh
-        LRU recency, stale entries are dropped."""
+        LRU recency, stale *clean* entries are dropped (stale dirty
+        entries stay — see below)."""
         ent = self._entries.get(key)
         if ent is None:
             self.stats.misses += 1
             return False, None
         if ent.version != version:
-            self._drop(key)
+            # stale for this request: clean entries are dropped so
+            # their bytes reclaim immediately, but a DIRTY entry is the
+            # only copy of a committed-on-device payload — it stays
+            # resident until superseded, evicted (flush handback) or
+            # explicitly flushed, never silently lost
+            if not ent.dirty:
+                self._drop(key)
             self.stats.misses += 1
             return False, None
         self._entries.move_to_end(key)
@@ -108,29 +175,89 @@ class UnitCache:
         self.stats.hit_wire_bytes += ent.nbytes
         return True, ent.value
 
+    def peek(self, key: Hashable) -> Optional[Entry]:
+        """The entry for ``key`` (any version), with no stats or LRU
+        side effects — the executor's drain uses this to decide commit
+        vs materialize."""
+        return self._entries.get(key)
+
     def deposit(
-        self, key: Hashable, version: int, value: Any, nbytes: int
-    ) -> None:
+        self,
+        key: Hashable,
+        version: int,
+        value: Any,
+        nbytes: int,
+        dirty: bool = False,
+    ) -> DepositResult:
         """Insert/replace the unit's payload at ``version`` (MRU),
-        evicting LRU entries until the budget holds. A payload larger
-        than the whole budget is refused (and any stale entry for the
-        key dropped)."""
+        evicting LRU entries until the budget holds. ``dirty`` marks
+        the payload newer than the host copy (writebacks); under
+        write-through it is ignored and every deposit is clean. A
+        payload larger than the whole budget is refused (and any stale
+        entry for the key dropped). Evicted *dirty* entries are
+        returned for the caller to flush."""
+        dirty = bool(dirty) and self.write_back
         if key in self._entries:
+            # superseded: the old payload can never be needed again
             self._drop(key)
         if not self.enabled or nbytes > self.budget_bytes:
             self.stats.refusals += 1
-            return
+            return DepositResult(False)
+        flushes: List[Tuple[Hashable, Entry]] = []
         while self.bytes_used + nbytes > self.budget_bytes:
-            _, ent = self._entries.popitem(last=False)
+            k, ent = self._entries.popitem(last=False)
             self.bytes_used -= ent.nbytes
             self.stats.evictions += 1
-        self._entries[key] = _Entry(version, value, int(nbytes))
+            if ent.dirty:
+                # flush-on-evict: residency lost, the caller pays the
+                # D2H now (ordered before anything can refetch k)
+                self.stats.dirty_bytes -= ent.nbytes
+                self.stats.flushes += 1
+                self.stats.flush_wire_bytes += ent.nbytes
+                flushes.append((k, ent))
+        self._entries[key] = Entry(version, value, int(nbytes), dirty)
         self.bytes_used += int(nbytes)
         self.peak_bytes = max(self.peak_bytes, self.bytes_used)
         self.stats.deposits += 1
+        if dirty:
+            self.stats.dirty_bytes += int(nbytes)
+        return DepositResult(True, flushes)
+
+    # ------------------------------------------------------------------
+    # dirty-state management (write-back)
+    # ------------------------------------------------------------------
+    def dirty_entries(self) -> List[Tuple[Hashable, Entry]]:
+        """Dirty entries in LRU (oldest-first) order — the
+        deterministic flush order for gather/checkpoint."""
+        return [(k, e) for k, e in self._entries.items() if e.dirty]
+
+    def mark_flushed(self, key: Hashable) -> None:
+        """Record that ``key``'s dirty payload was materialized to the
+        host store. The entry stays resident (now clean) so later
+        sweeps still hit. Call only AFTER the host put succeeded — a
+        failed flush must leave the entry dirty for retry."""
+        ent = self._entries[key]
+        assert ent.dirty, key
+        ent.dirty = False
+        self.stats.dirty_bytes -= ent.nbytes
+        self.stats.flushes += 1
+        self.stats.flush_wire_bytes += ent.nbytes
+
+    def note_d2h_elided(self, nbytes: int) -> None:
+        """Account one writeback that committed on device with no host
+        copy (its D2H never touches the wire as its own transfer)."""
+        self.stats.d2h_elided += 1
+        self.stats.d2h_elided_wire_bytes += int(nbytes)
 
     # ------------------------------------------------------------------
     def _drop(self, key: Hashable) -> None:
         ent = self._entries.pop(key, None)
         if ent is not None:
             self.bytes_used -= ent.nbytes
+            if ent.dirty:
+                self.stats.dirty_bytes -= ent.nbytes
+
+
+# The PR 2 name: the read-side behavior (lookup/deposit/LRU/budget) is
+# unchanged, so existing consumers keep working; write-back is additive.
+UnitCache = DeviceResidencyManager

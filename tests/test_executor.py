@@ -153,12 +153,16 @@ def test_zero_budget_reduces_to_fetch_every_sweep(code):
 def test_cache_hits_emit_no_h2d_record(code):
     """With a budget that holds the full working set, every unit is
     resident after the warmup sweep: steady-state sweeps emit NO h2d
-    transfer record at all, and d2h accounting is untouched
-    (write-through keeps the host store consistent)."""
+    transfer record at all. Under policy="write-through" d2h
+    accounting is untouched (every writeback still materializes — the
+    PR 2 semantics, kept reproducible for A/B benchmarking)."""
     p_prev, p_cur, vel2 = _initial(SHAPE)
     cfg = OOCConfig(SHAPE, 4, BT, paper_code_fields(code))
     sync = OutOfCoreWave(cfg, p_prev, p_cur, vel2)
-    live = AsyncExecutor(cfg, p_prev, p_cur, vel2, cache_bytes=1 << 30)
+    live = AsyncExecutor(
+        cfg, p_prev, p_cur, vel2, cache_bytes=1 << 30,
+        policy="write-through",
+    )
     sync.run(4 * BT)
     live.run(4 * BT)
     h2d_by_sweep = {}
@@ -173,6 +177,8 @@ def test_cache_hits_emit_no_h2d_record(code):
         live.transfer_summary()["d2h_wire"]
         == sync.transfer_summary()["d2h_wire"]
     )
+    cache = live.stats()["cache"]
+    assert cache["d2h_elided"] == 0 and cache["dirty_bytes"] == 0
 
 
 def test_steady_state_h2d_wire_beats_paper_schedule():
@@ -291,6 +297,160 @@ def test_gather_flushes_pending_window():
     np.testing.assert_array_equal(
         live.gather("p_cur"), sync.gather("p_cur")
     )
+
+
+# ----------------------------------------------------------------------
+# write-back residency: D2H elision, flush ordering, fault injection
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("code", [1, 2, 4])
+def test_writeback_elides_steady_state_d2h(code):
+    """The PR's acceptance bar: with the working set resident and
+    policy="write-back" (the default), NO interior writeback touches
+    the wire — d2h_wire is zero for every sweep (commits happen on
+    device) — and output is still bit-identical to the synchronous
+    engine (gather flushes first). The only d2h the whole run pays is
+    the one flush of the final dirty working set at gather."""
+    p_prev, p_cur, vel2 = _initial(SHAPE)
+    cfg = OOCConfig(SHAPE, 4, BT, paper_code_fields(code))
+    sync = OutOfCoreWave(cfg, p_prev, p_cur, vel2)
+    live = AsyncExecutor(cfg, p_prev, p_cur, vel2, cache_bytes=1 << 30)
+    sync.run(4 * BT)
+    live.run(4 * BT)
+    assert live.transfer_summary()["d2h_wire"] == 0
+    cache = live.stats()["cache"]
+    assert cache["d2h_elided"] > 0
+    assert cache["d2h_elided_wire_bytes"] > 0
+    assert cache["dirty_bytes"] > 0  # interior state lives on device
+    for name in ("p_cur", "p_prev"):
+        np.testing.assert_array_equal(
+            live.gather(name), sync.gather(name)
+        )
+    # gather's flush is the only d2h traffic, and it moves the dirty
+    # working set exactly once (vs the sync engine's every-sweep cost)
+    post = live.transfer_summary()
+    assert post["d2h_wire"] == post["d2h_flush_wire"] > 0
+    assert post["d2h_wire"] < sync.transfer_summary()["d2h_wire"]
+    assert live.stats()["cache"]["dirty_bytes"] == 0
+
+
+@pytest.mark.parametrize("code,budget", [(2, 0), (2, 100_000),
+                                         (2, 1 << 30), (1, 100_000)])
+def test_writeback_transfer_log_matches_model(code, budget):
+    """Model/live agreement in BOTH directions: the cached multi-sweep
+    graph emits exactly the h2d, d2h and flush transfers (field, unit,
+    sweep, flush — compared as a multiset, since the live log orders
+    by drain time while the graph is topological) the live write-back
+    executor pays for, at every budget — including the forced-eviction
+    regime (budget 100k) where dirty payloads flush mid-sweep. Flush
+    wire bytes must agree exactly (both sides use the real payload
+    size); bulk wire totals within the 2% codec-padding slack of the
+    analytic model."""
+    p_prev, p_cur, vel2 = _initial(SHAPE)
+    cfg = OOCConfig(SHAPE, 4, BT, paper_code_fields(code))
+    live = AsyncExecutor(cfg, p_prev, p_cur, vel2, cache_bytes=budget)
+    live.run(4 * BT)  # run() drains the window; no gather flush yet
+    pre_gather = live.stats()["cache"]
+    stats = {}
+    tasks = build_sweep_tasks(
+        cfg, sweeps=4, schedule="depth2", cache_bytes=budget,
+        stats=stats,
+    )
+    graph = sorted(
+        (t.kind, t.field, t.unit, t.sweep, t.flush,
+         int(t.amount) if t.flush else None)
+        for t in tasks if t.kind in ("h2d", "d2h")
+    )
+    issued = sorted(
+        (t.direction, t.field, t.unit, t.sweep, t.flush,
+         t.wire_bytes if t.flush else None)
+        for t in live.transfers
+    )
+    assert issued == graph
+    modeled = wire_totals(tasks)
+    real = live.transfer_summary()
+    for d in ("h2d", "d2h"):
+        assert real[f"{d}_wire"] == pytest.approx(
+            modeled[d], rel=0.02, abs=1
+        ), d
+    for k in ("hits", "evictions", "flushes", "d2h_elided",
+              "d2h_elided_wire_bytes", "dirty_bytes"):
+        assert pre_gather[k] == stats[k], k
+    if budget == 100_000 and code == 1:
+        # the eviction regime really exercised the flush path
+        assert stats["flushes"] > 0
+        assert any(t.flush for t in tasks)
+
+
+def test_forced_eviction_mid_sweep_stays_bit_exact():
+    """Eviction regime: dirty payloads lose residency mid-sweep and
+    flush out of order with the parked window — output must not move
+    a bit, and the hazard (no stale host read) holds by construction
+    (HostUnitStore.stage asserts host_current on every real fetch)."""
+    p_prev, p_cur, vel2 = _initial(SHAPE)
+    cfg = OOCConfig(SHAPE, 4, BT, paper_code_fields(1))
+    sync = OutOfCoreWave(cfg, p_prev, p_cur, vel2)
+    live = AsyncExecutor(cfg, p_prev, p_cur, vel2, cache_bytes=100_000)
+    sync.run(4 * BT)
+    live.run(4 * BT)
+    assert live.stats()["cache"]["flushes"] > 0
+    for name in ("p_cur", "p_prev"):
+        np.testing.assert_array_equal(
+            live.gather(name), sync.gather(name)
+        )
+
+
+def test_flush_failure_leaves_dirty_for_retry():
+    """Fault injection on the flush path (ROADMAP straggler/fault open
+    item): a unit's flush that fails mid-gather must leave that entry
+    dirty — host state is never silently wrong — and a retry flushes
+    exactly the remainder, after which output is bit-exact."""
+    p_prev, p_cur, vel2 = _initial(SHAPE)
+    cfg = OOCConfig(SHAPE, 4, BT, paper_code_fields(2))
+    sync = OutOfCoreWave(cfg, p_prev, p_cur, vel2)
+    live = AsyncExecutor(cfg, p_prev, p_cur, vel2, cache_bytes=1 << 30)
+    sync.run(2 * BT)
+    live.run(2 * BT)
+    dirty_before = live.stats()["cache"]["dirty_bytes"]
+    assert dirty_before > 0
+    orig_put = live.store.put
+    state = {"failed": False}
+
+    def flaky_put(field, kind, idx, value, version=None):
+        if not state["failed"]:
+            state["failed"] = True
+            raise RuntimeError("injected flush failure")
+        return orig_put(field, kind, idx, value, version=version)
+
+    live.store.put = flaky_put
+    with pytest.raises(RuntimeError):
+        live.flush()
+    # the failed unit is still dirty; nothing was marked clean early
+    assert live.stats()["cache"]["dirty_bytes"] > 0
+    assert live.flush() > 0  # retry drains the remainder
+    assert live.stats()["cache"]["dirty_bytes"] == 0
+    for name in ("p_cur", "p_prev"):
+        np.testing.assert_array_equal(
+            live.gather(name), sync.gather(name)
+        )
+
+
+def test_writeback_version_commits_without_host_copy():
+    """finish() leaves write-back state committed-on-device: the store
+    version counters advance with every sweep while the host payload
+    version lags until flush — the distinction HostUnitStore now
+    tracks."""
+    p_prev, p_cur, vel2 = _initial(SHAPE)
+    cfg = OOCConfig(SHAPE, 4, BT, paper_code_fields(2))
+    live = AsyncExecutor(cfg, p_prev, p_cur, vel2, cache_bytes=1 << 30)
+    live.run(3 * BT)
+    assert live.store.version_of("p_prev", "R", 1) == 3
+    assert live.store.host_version_of("p_prev", "R", 1) == 0
+    assert not live.store.host_current("p_prev", "R", 1)
+    live.flush()
+    assert live.store.host_current("p_prev", "R", 1)
+    assert live.store.host_version_of("p_prev", "R", 1) == 3
 
 
 def test_get_schedule_parsing():

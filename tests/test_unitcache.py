@@ -1,13 +1,19 @@
-"""UnitCache policy: byte-budgeted LRU with versioned entries.
+"""Device residency policy: dirty-tracking byte-budgeted LRU.
 
-The cache is pure policy (no JAX) and deliberately deterministic — the
-task-graph builder replays the same policy to model elided transfers,
-so these tests pin the exact hit/evict/refuse behavior both sides rely
-on (see tests/test_executor.py for the builder/executor agreement).
+The manager is pure policy (no JAX) and deliberately deterministic —
+the task-graph builder replays the same policy to model elided
+transfers and flush points, so these tests pin the exact
+hit/evict/refuse/flush behavior both sides rely on (see
+tests/test_executor.py for the builder/executor agreement).
 """
 
+import pytest
+
 from repro.core.taskgraph import unit_wire_bytes
-from repro.core.unitcache import UnitCache
+from repro.core.unitcache import (
+    DeviceResidencyManager,
+    UnitCache,
+)
 from repro.kernels.zfp import ref as zfp_ref
 
 
@@ -73,6 +79,108 @@ def test_stats_and_peak_tracking():
     assert c.stats.hit_rate == 0.5
     d = c.stats.as_dict()
     assert d["deposits"] == 2 and d["evictions"] == 1
+
+
+# ----------------------------------------------------------------------
+# write-back residency: dirty tracking + flush-on-evict
+# ----------------------------------------------------------------------
+
+
+def test_unitcache_alias_is_residency_manager():
+    assert UnitCache is DeviceResidencyManager
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        DeviceResidencyManager(100, policy="write-around")
+
+
+def test_dirty_deposit_tracks_dirty_bytes():
+    c = DeviceResidencyManager(100)  # write-back default
+    assert c.write_back
+    res = c.deposit("a", 1, "A", 40, dirty=True)
+    assert res.stored and not res.flushes
+    assert c.dirty_bytes == 40 and c.bytes_used == 40
+    c.deposit("b", 0, "B", 30)  # clean deposit
+    assert c.dirty_bytes == 40 and c.bytes_used == 70
+    assert c.stats.dirty_bytes == 40
+
+
+def test_write_through_ignores_dirty_flag():
+    c = DeviceResidencyManager(100, policy="write-through")
+    assert not c.write_back
+    c.deposit("a", 1, "A", 40, dirty=True)
+    assert c.dirty_bytes == 0
+    assert c.peek("a") is not None and not c.peek("a").dirty
+    assert not c.dirty_entries()
+
+
+def test_evicting_dirty_entry_returns_flush():
+    """Flush-on-evict: the dirty LRU victim comes back to the caller,
+    who must materialize it; clean victims are dropped silently."""
+    c = DeviceResidencyManager(100)
+    c.deposit("dirty", 3, "D", 60, dirty=True)
+    c.deposit("clean", 0, "C", 30)
+    res = c.deposit("new", 0, "N", 80)  # evicts both
+    assert res.stored
+    assert [(k, e.version, e.value) for k, e in res.flushes] == [
+        ("dirty", 3, "D")
+    ]
+    assert c.stats.evictions == 2
+    assert c.stats.flushes == 1 and c.stats.flush_wire_bytes == 60
+    assert c.dirty_bytes == 0
+
+
+def test_superseding_dirty_entry_drops_silently():
+    """Replacing a key's dirty entry with a newer version must NOT
+    flush: the superseded payload can never be needed (the executor's
+    window still holds the newest data until it commits)."""
+    c = DeviceResidencyManager(100)
+    c.deposit("a", 1, "v1", 40, dirty=True)
+    res = c.deposit("a", 2, "v2", 40, dirty=True)
+    assert res.stored and not res.flushes
+    assert c.stats.flushes == 0
+    assert c.dirty_bytes == 40 and c.bytes_used == 40
+
+
+def test_dirty_entries_lru_order_and_mark_flushed():
+    """The explicit-flush path (gather/checkpoint): deterministic
+    oldest-first order; marking clears dirty accounting but keeps the
+    entry resident for later hits."""
+    c = DeviceResidencyManager(1000)
+    c.deposit("a", 1, "A", 10, dirty=True)
+    c.deposit("b", 1, "B", 20, dirty=True)
+    c.deposit("ro", 0, "R", 5)
+    c.lookup("a", 1)  # refresh a: flush order becomes b, a
+    assert [k for k, _ in c.dirty_entries()] == ["b", "a"]
+    c.mark_flushed("b")
+    assert [k for k, _ in c.dirty_entries()] == ["a"]
+    assert c.dirty_bytes == 10
+    assert c.stats.flushes == 1 and c.stats.flush_wire_bytes == 20
+    # still resident (clean): later sweeps hit without refetch
+    assert c.lookup("b", 1) == (True, "B")
+    c.mark_flushed("a")
+    assert c.dirty_bytes == 0 and len(c) == 3
+
+
+def test_refused_deposit_reports_not_stored():
+    c = DeviceResidencyManager(50)
+    res = c.deposit("big", 1, "B", 60, dirty=True)
+    assert not res.stored and not res.flushes
+    assert c.dirty_bytes == 0
+    assert c.stats.refusals == 1
+
+
+def test_d2h_elision_accounting():
+    c = DeviceResidencyManager(100)
+    c.note_d2h_elided(40)
+    c.note_d2h_elided(40)
+    d = c.stats.as_dict()
+    assert d["d2h_elided"] == 2
+    assert d["d2h_elided_wire_bytes"] == 80
+    # as_dict carries the full write-back counter set
+    for k in ("flushes", "flush_wire_bytes", "dirty_bytes"):
+        assert k in d
 
 
 def test_unit_wire_bytes_matches_compressed_nbytes():
