@@ -3,10 +3,11 @@ micro-benches. Prints ``name,us_per_call,derived`` CSV.
 
 ``--smoke`` runs the fig5/fig6 pipeline on a tiny grid (seconds, CPU)
 and writes a ``BENCH_smoke.json`` artifact — wire bytes both
-directions, dirty-flush counts, residency peak bytes, modeled sweep
-time, and hit rate — so CI tracks the perf trajectory of the
-out-of-core engine on every push and holds the steady-state H2D- and
-D2H-elision invariants.
+directions, dirty-flush counts, residency peak bytes, checkpoint
+overhead (snapshot/restore wall time + bytes), modeled sweep time,
+and hit rate — so CI tracks the perf trajectory of the out-of-core
+engine on every push and holds the steady-state H2D- and D2H-elision
+invariants plus the lossless checkpoint round trip.
 """
 
 from __future__ import annotations
@@ -21,10 +22,14 @@ SMOKE_OUT = "BENCH_smoke.json"
 def smoke(out_path: str = SMOKE_OUT) -> dict:
     """Tiny-grid fig5/fig6 sweep: live wire-byte accounting (uncached
     vs write-through vs write-back residency) + modeled sweep times,
-    as one JSON artifact. Asserts the two steady-state elision
-    invariants CI keeps holding: residency drives per-sweep H2D to
-    below-uncached levels, and the write-back policy drives interior
-    per-sweep D2H to exactly zero."""
+    as one JSON artifact. Asserts the three invariants CI keeps
+    holding: residency drives per-sweep H2D to below-uncached levels,
+    the write-back policy drives interior per-sweep D2H to exactly
+    zero, and the checkpoint round trip (quiesce + ordered flush +
+    atomic persist + restore) is lossless."""
+    import pathlib
+    import tempfile
+
     import numpy as np
 
     from repro.core.executor import AsyncExecutor
@@ -50,8 +55,9 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
     for code in (1, 2, 4):
         cfg = OOCConfig(shape, ndiv, bt, paper_code_fields(code))
         row = {}
+        by_label = {}
         for label, budget, policy in engines:
-            eng = AsyncExecutor(
+            eng = by_label[label] = AsyncExecutor(
                 cfg, p_prev, p_cur, vel2, schedule="depth2",
                 cache_bytes=budget, policy=policy,
             )
@@ -107,6 +113,35 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
             == row["uncached"]["steady_d2h_wire_per_sweep"]
             > 0
         ), (code, row)
+        # checkpoint overhead: snapshot the (dirty) write-back engine
+        # — quiesce + ordered flush + atomic persist — then restore
+        # and hold invariant 3: the round trip is lossless (restored
+        # host state gathers bit-identical to the live engine's)
+        eng = by_label["cached"]
+        with tempfile.TemporaryDirectory() as td:
+            t0 = time.perf_counter()
+            path = eng.checkpoint(td)
+            ckpt_wall = time.perf_counter() - t0
+            ckpt_bytes = sum(
+                f.stat().st_size
+                for f in pathlib.Path(path).iterdir() if f.is_file()
+            )
+            t0 = time.perf_counter()
+            restored = AsyncExecutor.restore(td)
+            restore_wall = time.perf_counter() - t0
+            roundtrip_ok = bool(np.array_equal(
+                restored.gather("p_cur"), eng.gather("p_cur")
+            ))
+        st = eng.stats()["cache"]
+        row["checkpoint"] = {
+            "ckpt_wall_s": round(ckpt_wall, 4),
+            "restore_wall_s": round(restore_wall, 4),
+            "ckpt_bytes": ckpt_bytes,
+            "flush_units": st["flushes"],
+            "flush_wire": st["flush_wire_bytes"],
+            "roundtrip_bit_identical": roundtrip_ok,
+        }
+        assert roundtrip_ok, (code, row)
         mstats = {}
         tl = sweep_timeline(
             cfg, V100_PCIE, sweeps=sweeps, schedule="depth2",

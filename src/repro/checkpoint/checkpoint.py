@@ -3,9 +3,16 @@
 * Atomic: write to ``<dir>/tmp.<step>``, fsync, ``os.replace`` to
   ``step_<k>`` — a preempted writer never corrupts the latest ckpt.
 * Sharded: each leaf is its own file (parallel IO at scale).
-* Lossless-compressed with zstd; optionally *lossy* fixed-rate ZFP for
-  f32 leaves (the paper's refs [17][18]: lossy checkpointing) — 2-4x
-  smaller optimizer-state checkpoints with bounded error.
+* Lossless-compressed with zstd when available (``zstd_level > 0``);
+  ``zstd_level=0`` stores leaves raw, so checkpointing never depends on
+  the optional ``zstandard`` package. Optionally *lossy* fixed-rate ZFP
+  for f32 leaves (the paper's refs [17][18]: lossy checkpointing) —
+  2-4x smaller optimizer-state checkpoints with bounded error.
+* Self-describing: the manifest can carry an ``extra`` JSON payload
+  alongside the leaf table — ``repro.core.executor.AsyncExecutor.
+  checkpoint`` uses it to persist the out-of-core run's unit version
+  vector and executor progress so ``restore``/``load`` can rebuild a
+  live run without external context.
 * Elastic: restore returns host numpy arrays; ``place`` shards them
   onto any mesh/rules (different from the writer's) — restart on a
   degraded or grown cluster.
@@ -64,26 +71,46 @@ def save(
     step: int,
     tree,
     *,
-    zstd_level: int = 3,
+    zstd_level: Optional[int] = None,
     lossy_planes: Optional[int] = None,
     keep: int = 3,
+    extra: Optional[Dict[str, Any]] = None,
 ) -> str:
-    cctx = _require_zstd().ZstdCompressor(level=zstd_level)
+    """Atomically persist ``tree`` as ``<directory>/step_<step>``.
+
+    ``zstd_level`` selects the lossless leaf codec: a positive level
+    requires the optional ``zstandard`` package, ``0`` stores leaves
+    raw, and ``None`` (default) picks zstd when installed and falls
+    back to raw otherwise. ``lossy_planes`` additionally runs large f32
+    leaves through the fixed-rate ZFP codec (lossy checkpointing).
+    ``extra`` is embedded verbatim (JSON) in the manifest and returned
+    by ``load``/``read_manifest`` — writer-defined context such as the
+    out-of-core executor's progress record. Returns the final path.
+    """
+    if zstd_level is None:
+        zstd_level = 3 if HAVE_ZSTD else 0
+    cctx = (
+        _require_zstd().ZstdCompressor(level=zstd_level)
+        if zstd_level > 0 else None
+    )
+    base_codec = "zstd" if cctx else "raw"
     base = pathlib.Path(directory)
     base.mkdir(parents=True, exist_ok=True)
     tmp = base / f"tmp.{step}"
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir()
-    manifest = {"step": step, "leaves": {}}
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
     for key, leaf in _flatten(tree).items():
         arr = np.asarray(leaf)
-        fname = key.replace(_FLAT_SEP, "__") + ".zst"
+        fname = key.replace(_FLAT_SEP, "__") + (
+            ".zst" if cctx else ".bin"
+        )
         entry = {
             "file": fname,
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
-            "codec": "zstd",
+            "codec": base_codec,
         }
         if (
             lossy_planes
@@ -101,21 +128,44 @@ def save(
                 + emax.tobytes()
             )
             entry.update(
-                codec="zfp+zstd",
+                codec=f"zfp+{base_codec}",
                 planes=lossy_planes,
                 payload_words=int(payload.shape[1]),
             )
         else:
             blob = arr.tobytes()
-        (tmp / fname).write_bytes(cctx.compress(blob))
+        _write_durable(
+            tmp / fname, cctx.compress(blob) if cctx else blob
+        )
         manifest["leaves"][key] = entry
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    _write_durable(tmp / "manifest.json", json.dumps(manifest).encode())
+    # every shard and the manifest are fsynced above; sync the tmp dir
+    # (directory entries) before the rename, and the parent after, so
+    # the published step_<k> is durable as a whole — a crash at any
+    # point leaves either the previous checkpoint or this complete one
+    _fsync_dir(tmp)
     final = base / f"step_{step:010d}"
     if final.exists():
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_dir(base)
     _gc(base, keep)
     return str(final)
+
+
+def _write_durable(path: pathlib.Path, blob: bytes) -> None:
+    with open(path, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(path: pathlib.Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _gc(base: pathlib.Path, keep: int) -> None:
@@ -132,43 +182,65 @@ def latest(directory: str) -> Optional[str]:
     return str(ckpts[-1]) if ckpts else None
 
 
+def read_manifest(path: str) -> Dict[str, Any]:
+    """The checkpoint's manifest dict (step, leaf table, extra)."""
+    return json.loads(
+        (pathlib.Path(path) / "manifest.json").read_text()
+    )
+
+
+def _decode_leaf(p: pathlib.Path, entry: Dict[str, Any]) -> np.ndarray:
+    blob = (p / entry["file"]).read_bytes()
+    codec = entry["codec"]
+    if codec.endswith("zstd"):
+        blob = _require_zstd().ZstdDecompressor().decompress(blob)
+    shape = tuple(entry["shape"])
+    dtype = np.dtype(entry["dtype"])
+    if codec.startswith("zfp+"):
+        n = int.from_bytes(blob[:8], "little")
+        w = entry["payload_words"]
+        payload = np.frombuffer(
+            blob[8 : 8 + n * w * 4], np.uint32
+        ).reshape(n, w)
+        emax = np.frombuffer(blob[8 + n * w * 4 :], np.int16)
+        size = int(np.prod(shape))
+        c = Compressed(
+            jnp.asarray(payload),
+            jnp.asarray(emax.astype(np.int32)),
+            (((size + 3) // 4) * 4,),
+            entry["planes"],
+            1,
+            "float32",
+        )
+        return np.asarray(zfp_ops.decompress(c))[:size].reshape(shape)
+    return np.frombuffer(blob, dtype=dtype).reshape(shape)
+
+
+def load(path: str) -> Tuple[int, Dict[str, np.ndarray], Dict[str, Any]]:
+    """Read every leaf of one checkpoint without a template tree.
+
+    Returns ``(step, {flat_key: array}, extra)`` — the manifest-order
+    leaf dict plus the writer's ``extra`` payload. ``restore`` layers
+    the like-tree reassembly on top; structure-free consumers (the
+    out-of-core executor's ``AsyncExecutor.restore``) use this
+    directly.
+    """
+    p = pathlib.Path(path)
+    manifest = read_manifest(path)
+    out = {
+        key: _decode_leaf(p, entry)
+        for key, entry in manifest["leaves"].items()
+    }
+    return manifest["step"], out, manifest.get("extra", {})
+
+
 def restore(path: str, like_tree) -> Tuple[int, Any]:
     """Returns (step, tree of host numpy arrays shaped like like_tree)."""
-    p = pathlib.Path(path)
-    manifest = json.loads((p / "manifest.json").read_text())
-    dctx = _require_zstd().ZstdDecompressor()
-    flat = _flatten(like_tree)
-    out: Dict[str, np.ndarray] = {}
-    for key, entry in manifest["leaves"].items():
-        blob = dctx.decompress((p / entry["file"]).read_bytes())
-        shape = tuple(entry["shape"])
-        dtype = np.dtype(entry["dtype"])
-        if entry["codec"] == "zfp+zstd":
-            n = int.from_bytes(blob[:8], "little")
-            w = entry["payload_words"]
-            payload = np.frombuffer(
-                blob[8 : 8 + n * w * 4], np.uint32
-            ).reshape(n, w)
-            emax = np.frombuffer(blob[8 + n * w * 4 :], np.int16)
-            size = int(np.prod(shape))
-            c = Compressed(
-                jnp.asarray(payload),
-                jnp.asarray(emax.astype(np.int32)),
-                (((size + 3) // 4) * 4,),
-                entry["planes"],
-                1,
-                "float32",
-            )
-            arr = np.asarray(zfp_ops.decompress(c))[:size].reshape(shape)
-        else:
-            arr = np.frombuffer(blob, dtype=dtype).reshape(shape)
-        out[key] = arr
+    step, out, _ = load(path)
     # reassemble in like_tree structure
     leaves, treedef = jax.tree.flatten(like_tree)
     keys = list(_flatten(like_tree))
-    return manifest["step"], jax.tree.unflatten(
-        treedef, [out[k] for k in keys]
-    )
+    return step, jax.tree.unflatten(treedef, [out[k] for k in keys])
 
 
 def place(tree, axes_tree, mesh, rules):

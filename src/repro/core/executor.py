@@ -49,13 +49,33 @@ when residency is lost:
   refetch it: the fetch-after-writeback hazard holds across pending
   flushes because a fetch either hits the dirty entry or finds the
   flushed (current) host bytes;
-* **flush-on-gather / flush-on-checkpoint** — ``flush()`` drains every
+* **flush-on-gather / flush-on-demand** — ``flush()`` drains every
   dirty entry to the host store in deterministic LRU order;
-  ``gather()`` calls it, and any checkpoint of the host store must.
+  ``gather()`` calls it;
+* **flush-on-checkpoint** — the checkpoint cut, the fourth flush
+  point: ``checkpoint(dir)`` quiesces the in-flight window
+  (``finish()``), runs the ordered ``flush()``, and atomically
+  persists the host store payloads + per-unit version vector +
+  executor progress through ``repro.checkpoint.checkpoint``;
+  ``AsyncExecutor.restore(dir)`` rebuilds the store, the residency
+  manager, and the sweep cursor, and resumes **bit-identically** to an
+  uninterrupted run (the transfer log differs — residency restarts
+  cold — but not one output bit does).
+
+A straggling or failed flush D2H need not block the snapshot: with a
+``repro.distributed.fault.ReissuePolicy`` attached, a failed flush put
+is reissued once on the spare stream (``CacheStats.flush_reissues``)
+and an over-deadline put is flagged (``flush_stragglers``); the
+timeline replay (``repro.core.pipeline.simulate(..., reissue=...)``)
+prices the same mitigation on a modeled ``spare`` resource.
 
 ``policy="write-through"`` reproduces PR 2 exactly (every writeback
 materializes on drain) for A/B runs; ``cache_bytes=0`` (the default)
 disables residency and reduces to fetch-and-write-every-sweep.
+
+``docs/architecture.md`` walks the whole unit lifecycle — versions,
+dirty bits, the flush points, the checkpoint cut — with a timeline
+diagram.
 
 Numerics: the executor issues the *same* JAX ops on the same values as
 the synchronous engine — assembly, temporal-blocked stencil, fixed-rate
@@ -67,6 +87,9 @@ interleaves materialization or how many transfers residency elides.
 
 from __future__ import annotations
 
+import pathlib
+import statistics
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
@@ -74,6 +97,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import checkpoint as ckpt
 from repro.core.outofcore import HostUnitStore, OOCConfig
 from repro.core.taskgraph import (
     Schedule,
@@ -84,9 +108,13 @@ from repro.core.taskgraph import (
     summarize_transfers,
 )
 from repro.core.unitcache import DeviceResidencyManager, Entry
+from repro.distributed.fault import ReissuePolicy
 from repro.kernels.stencil import ops as stencil_ops
 from repro.kernels.zfp import ops as zfp_ops
 from repro.kernels.zfp.ref import Compressed
+
+# manifest schema version of AsyncExecutor.checkpoint payloads
+CKPT_FORMAT = 1
 
 UnitKey = Tuple[str, Tuple[str, int]]  # (field, (kind, idx))
 
@@ -120,13 +148,42 @@ class AsyncExecutor:
     def __init__(
         self,
         cfg: OOCConfig,
-        p_prev: np.ndarray,
-        p_cur: np.ndarray,
-        vel2: np.ndarray,
+        p_prev: Optional[np.ndarray] = None,
+        p_cur: Optional[np.ndarray] = None,
+        vel2: Optional[np.ndarray] = None,
         schedule: Union[str, Schedule] = "depth2",
         cache_bytes: int = 0,
         policy: str = "write-back",
+        reissue: Optional[ReissuePolicy] = None,
     ):
+        """Build a live executor over ``cfg``.
+
+        Parameters
+        ----------
+        p_prev, p_cur, vel2:
+            Full initial fields, decomposed into host units by
+            ``HostUnitStore.seed``. Pass all three, or none of them to
+            construct an unseeded executor (``restore`` uses this to
+            rebuild the store from a checkpoint instead).
+        schedule:
+            Issue-order strategy (name or ``Schedule``): ``"paper"``,
+            ``"unitgrain"``/``"overlap"``, or ``"depth-k"``. Windowless
+            schedules still run double-buffered live (depth 2).
+        cache_bytes:
+            Device residency budget in bytes for the unit cache.
+            ``0`` (default) disables residency: every sweep refetches
+            and rewrites every unit.
+        policy:
+            Residency write policy — ``"write-back"`` (default, elide
+            interior D2H; dirty bytes move only at the ordered flush
+            points) or ``"write-through"`` (PR 2 semantics, every
+            writeback materializes; for A/B runs).
+        reissue:
+            Optional ``ReissuePolicy``: a failed flush put is reissued
+            once on the spare stream instead of aborting the
+            gather/checkpoint, and over-deadline puts are counted as
+            stragglers. ``None`` keeps the fail-fast behavior.
+        """
         self.cfg = cfg
         self.plan = cfg.plan
         self.plan.check_cover()
@@ -136,8 +193,20 @@ class AsyncExecutor:
         # depth-k schedules merely make explicit in the graph.
         self.depth = self.schedule.window or 2
         self.store = HostUnitStore(cfg)
-        self.store.seed({"p_prev": p_prev, "p_cur": p_cur, "vel2": vel2})
+        seeds = (p_prev, p_cur, vel2)
+        if any(s is not None for s in seeds):
+            assert all(s is not None for s in seeds), (
+                "seed all three fields or none"
+            )
+            self.store.seed(
+                {"p_prev": p_prev, "p_cur": p_cur, "vel2": vel2}
+            )
         self.cache = DeviceResidencyManager(cache_bytes, policy=policy)
+        self.reissue = reissue
+        # monotonic clock for flush straggler detection; swappable in
+        # tests for deterministic timing
+        self._timer = time.perf_counter
+        self._flush_times: List[float] = []
         self.transfers: List[Transfer] = []
         self.sweeps_done = 0
         self.max_inflight = 0  # peak block visits with pending D2H
@@ -336,13 +405,15 @@ class AsyncExecutor:
                 self._outvals[(t.field, t.unit)] = c
 
     def _flush_entry(
-        self, key: UnitKey, ent: Entry, block: int, mark: bool = False
+        self, key: UnitKey, ent: Entry, block: int, mark: bool = False,
+        reissued: bool = False,
     ) -> None:
         """Materialize one dirty payload to the host store and record
         the flush transfer. ``mark`` (the explicit-flush path) clears
         the entry's dirty bit AFTER the put, so a failed put leaves it
         dirty for retry; evicted entries (``mark=False``) were already
-        accounted by the manager when they were popped."""
+        accounted by the manager when they were popped. ``reissued``
+        tags the transfer as the spare-stream second attempt."""
         field, (kind, idx) = key
         wire = self.store.put(field, kind, idx, ent.value,
                               version=ent.version)
@@ -350,7 +421,7 @@ class AsyncExecutor:
             self.cache.mark_flushed(key)
         self.transfers.append(Transfer(
             "d2h", field, (kind, idx), _payload_raw_bytes(ent.value),
-            wire, self.sweeps_done, block, flush=True,
+            wire, self.sweeps_done, block, flush=True, reissued=reissued,
         ))
 
     def _park_writebacks(self, btasks: List[Task]) -> None:
@@ -429,12 +500,50 @@ class AsyncExecutor:
         """Flush-on-demand: materialize every dirty-resident payload to
         the host store, oldest (LRU) first — the deterministic flush
         order. Entries stay resident (clean) so later sweeps still hit.
-        ``gather()`` calls this; **checkpointing the host store must
-        too**. Returns the number of units flushed. A failed put leaves
-        its entry dirty, so a retry flushes exactly the remainder."""
+        ``gather()`` and ``checkpoint()`` call this. Returns the number
+        of units flushed.
+
+        Fault behavior: without a ``reissue`` policy, a failed put
+        raises and leaves its entry dirty, so a retry flushes exactly
+        the remainder. With ``reissue`` set, a failed put is reissued
+        once on the spare stream (``CacheStats.flush_reissues``) so a
+        single transient fault cannot stall a snapshot, and a put
+        slower than ``reissue.deadline(median of previous flushes)`` is
+        counted in ``CacheStats.flush_stragglers`` (the timeline model
+        prices the corresponding spare-stream win — see
+        ``repro.core.pipeline.simulate``).
+        """
         n = 0
         for key, ent in self.cache.dirty_entries():
-            self._flush_entry(key, ent, -1, mark=True)
+            t0 = self._timer()
+            reissued = False
+            try:
+                self._flush_entry(key, ent, -1, mark=True)
+            except Exception:
+                if self.reissue is None:
+                    raise
+                # spare-stream reissue: the straggling/failed attempt
+                # is abandoned and the payload re-put once; a second
+                # failure propagates (the entry stays dirty for retry)
+                self._flush_entry(key, ent, -1, mark=True, reissued=True)
+                self.cache.stats.flush_reissues += 1
+                reissued = True
+            elapsed = self._timer() - t0
+            # a reissued put already counted as a fault: its two-
+            # attempt elapsed neither flags a straggler nor enters the
+            # rolling median (it would inflate the baseline)
+            if not reissued:
+                if (
+                    self.reissue is not None
+                    and self._flush_times
+                    and self.reissue.should_reissue(
+                        elapsed, statistics.median(self._flush_times)
+                    )
+                ):
+                    self.cache.stats.flush_stragglers += 1
+                self._flush_times.append(elapsed)
+                if len(self._flush_times) > 64:  # rolling window
+                    self._flush_times.pop(0)
             n += 1
         return n
 
@@ -443,6 +552,144 @@ class AsyncExecutor:
         for _ in range(total_steps // self.cfg.bt):
             self.sweep()
         self.finish()
+
+    # ------------------------------------------------------------------
+    # crash-consistent checkpoint / restore
+    # ------------------------------------------------------------------
+    def checkpoint(
+        self,
+        directory: str,
+        *,
+        zstd_level: Optional[int] = None,
+        lossy_planes: Optional[int] = None,
+        keep: int = 3,
+    ) -> str:
+        """Crash-consistent snapshot of the in-flight run — one call.
+
+        The checkpoint cut (the fourth flush point) runs in order:
+
+        1. **quiesce** — ``finish()`` drains the in-flight window, so
+           every issued writeback is committed (on host, or on device
+           as a dirty resident);
+        2. **ordered flush** — ``flush()`` materializes every dirty
+           resident to the host store, LRU-first; with a ``reissue``
+           policy a straggling/failed flush is reissued on the spare
+           stream instead of stalling the snapshot;
+        3. **atomic persist** — the host store payloads, the per-unit
+           version vector, and the executor progress (sweep cursor,
+           schedule, residency policy + budget) go through
+           ``repro.checkpoint.checkpoint.save`` (sharded leaves,
+           tmp-dir + fsync + ``os.replace``, zstd when available or
+           raw otherwise, optionally lossy-ZFP f32 leaves via
+           ``lossy_planes``).
+
+        Returns the final checkpoint path (``<directory>/step_<k>``
+        where ``k`` is the sweep index). ``AsyncExecutor.restore``
+        rebuilds a live executor from it that resumes bit-identically
+        to an uninterrupted run.
+        """
+        self.finish()
+        self.flush()
+        leaves, store_meta = self.store.state_dict()
+        extra = {
+            "format": CKPT_FORMAT,
+            "kind": "ooc-executor",
+            "cfg": self.cfg.to_dict(),
+            "store": store_meta,
+            "progress": {
+                "sweeps_done": self.sweeps_done,
+                "schedule": self.schedule.name,
+                # full strategy fields, so a custom Schedule object
+                # (not resolvable by name) still restores
+                "schedule_spec": {
+                    "name": self.schedule.name,
+                    "codec_sync": self.schedule.codec_sync,
+                    "window": self.schedule.window,
+                },
+                "depth": self.depth,
+                "cache_bytes": self.cache.budget_bytes,
+                "policy": self.cache.policy,
+            },
+        }
+        return ckpt.save(
+            directory, self.sweeps_done, leaves,
+            zstd_level=zstd_level, lossy_planes=lossy_planes,
+            keep=keep, extra=extra,
+        )
+
+    @classmethod
+    def restore(
+        cls,
+        directory: str,
+        *,
+        schedule: Union[str, Schedule, None] = None,
+        cache_bytes: Optional[int] = None,
+        policy: Optional[str] = None,
+        reissue: Optional[ReissuePolicy] = None,
+    ) -> "AsyncExecutor":
+        """Rebuild a live executor from ``checkpoint()`` state.
+
+        ``directory`` may be a checkpoint root (the latest
+        ``step_<k>`` is used) or one specific checkpoint path. The
+        host unit store, per-unit version vector, and sweep cursor are
+        restored exactly; device residency restarts cold (it is device
+        state, gone with the process), so the first resumed sweep
+        refetches its working set — transfer counts differ from an
+        uninterrupted run, output does not: the resumed run is
+        bit-identical across schedules and cache policies
+        (tests/test_checkpoint_restore.py).
+
+        ``schedule``/``cache_bytes``/``policy`` default to the values
+        the checkpoint recorded; pass overrides to resume under a
+        different execution strategy (allowed because none of them
+        affect numerics).
+        """
+        path = pathlib.Path(directory)
+        if not (path / "manifest.json").exists():
+            found = ckpt.latest(directory)
+            if found is None:
+                raise FileNotFoundError(
+                    f"no checkpoint under {directory!r}"
+                )
+            path = pathlib.Path(found)
+        step, leaves, extra = ckpt.load(str(path))
+        if extra.get("kind") != "ooc-executor":
+            raise ValueError(
+                f"{path} is not an AsyncExecutor checkpoint "
+                f"(kind={extra.get('kind')!r})"
+            )
+        prog = extra["progress"]
+        if schedule is None:
+            try:
+                schedule = get_schedule(prog["schedule"])
+            except ValueError:
+                # a custom (non-builtin) Schedule: rebuild from the
+                # persisted strategy fields
+                spec = prog["schedule_spec"]
+                schedule = Schedule(
+                    spec["name"], codec_sync=spec["codec_sync"],
+                    window=spec["window"],
+                )
+        ex = cls(
+            OOCConfig.from_dict(extra["cfg"]),
+            schedule=schedule,
+            cache_bytes=(
+                prog["cache_bytes"] if cache_bytes is None
+                else cache_bytes
+            ),
+            policy=prog["policy"] if policy is None else policy,
+            reissue=reissue,
+        )
+        ex.store.load_state(leaves, extra["store"])
+        ex.sweeps_done = int(prog["sweeps_done"])
+        # newest issued version == committed version at the cut (the
+        # window was drained and every dirty resident flushed)
+        ex._ver = {
+            (u["field"], (u["kind"], int(u["idx"]))): int(u["version"])
+            for u in extra["store"]["units"].values()
+            if int(u["version"]) > 0
+        }
+        return ex
 
     # ------------------------------------------------------------------
     def gather(self, name: str) -> np.ndarray:

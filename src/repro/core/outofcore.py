@@ -15,19 +15,27 @@ The subsystem is split across three modules:
   objects with dependencies, built by ``build_sweep_tasks`` under a
   pluggable ``Schedule`` (``paper`` / ``unitgrain`` / ``depth-k``).
 * ``repro.core.executor`` — the *live* engine: walks the task graph
-  asynchronously with a double-buffered, bounded-depth in-flight window
-  (2-3 block visits resident, matching the paper's three CUDA streams),
-  overlapping H2D, codec+stencil compute, and D2H. Bit-identical
+  asynchronously with a bounded-depth in-flight window that stays open
+  across sweep boundaries (2-3 block visits resident, matching the
+  paper's three CUDA streams), overlapping H2D, codec+stencil compute,
+  and D2H. ``cache_bytes=``/``policy=`` enable the write-back device
+  residency manager (``repro.core.unitcache``) that elides resident
+  transfers in both directions, and ``checkpoint()``/``restore()``
+  snapshot and resume a live run crash-consistently. Bit-identical
   output to the synchronous engine below.
 * ``repro.core.pipeline`` — the timeline *replay*: the same graph on an
   event-driven three-stream model with hardware constants (V100/PCIe
   for the paper-faithful Figs. 5/6, TPU host-DMA for the adapted
-  projection).
+  projection), pricing the same residency elisions and flush traffic.
 
 This module keeps the synchronous reference engine
 (``OutOfCoreWave``, one block at a time, the numerics ground truth the
 executor is verified against) and the host-side unit store
-(``HostUnitStore``) both engines share.
+(``HostUnitStore``) both engines share. The store distinguishes
+committed-on-device from committed-on-host versions (write-back
+residency) and serializes itself for checkpoints via ``state_dict`` /
+``load_state``; ``docs/architecture.md`` documents the full unit
+lifecycle.
 
 Field roles follow paper Table I: two read-write pressure fields, a
 write-only Laplacian scratch (never transferred), and a read-only
@@ -79,6 +87,38 @@ class OOCConfig:
     @property
     def plan(self) -> BlockPlan:
         return BlockPlan(self.shape[0], self.ndiv, self.bt)
+
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-able description (checkpoint manifests); inverse of
+        ``from_dict`` — round-trips every field exactly."""
+        return {
+            "shape": list(self.shape),
+            "ndiv": self.ndiv,
+            "bt": self.bt,
+            "fields": {
+                name: {"role": spec.role, "planes": spec.planes}
+                for name, spec in self.fields.items()
+            },
+            "backend": self.backend,
+            "dtype": self.dtype,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "OOCConfig":
+        return cls(
+            shape=tuple(d["shape"]),
+            ndiv=int(d["ndiv"]),
+            bt=int(d["bt"]),
+            fields={
+                name: FieldSpec(
+                    f["role"],
+                    None if f["planes"] is None else int(f["planes"]),
+                )
+                for name, f in d["fields"].items()
+            },
+            backend=d.get("backend", "ref"),
+            dtype=d.get("dtype", "float32"),
+        )
 
 
 def paper_code_fields(code: int, f32: bool = True) -> Dict[str, FieldSpec]:
@@ -198,6 +238,75 @@ class HostUnitStore:
         key = (field, kind, idx)
         assert version > self._versions.get(key, 0), key
         self._versions[key] = version
+
+    # ------------------------------------------------------------------
+    # checkpoint serialization
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
+        """Serializable snapshot: ``(leaves, meta)``.
+
+        ``leaves`` is a flat dict of host numpy arrays (one checkpoint
+        shard per raw unit, two — payload + emax — per compressed
+        unit); ``meta`` is the JSON-able per-unit table carrying codec
+        descriptors and the committed version vector. The snapshot is
+        only taken at a consistent cut: every unit must be
+        ``host_current`` (i.e. all dirty residency flushed first —
+        ``AsyncExecutor.checkpoint`` guarantees this), asserted here so
+        a checkpoint can never capture stale host bytes.
+        """
+        leaves: Dict[str, np.ndarray] = {}
+        units: Dict[str, Dict[str, object]] = {}
+        for (field, kind, idx), stored in sorted(self._units.items()):
+            assert self.host_current(field, kind, idx), (
+                "checkpoint of a stale host unit — flush residency "
+                "before snapshotting", field, kind, idx,
+            )
+            ukey = f"{field}.{kind}{idx}"
+            meta: Dict[str, object] = {
+                "field": field, "kind": kind, "idx": idx,
+                "version": self._versions.get((field, kind, idx), 0),
+            }
+            if isinstance(stored, Compressed):
+                leaves[f"{ukey}.payload"] = np.asarray(stored.payload)
+                leaves[f"{ukey}.emax"] = np.asarray(stored.emax)
+                meta.update(
+                    codec="zfp", shape=list(stored.shape),
+                    planes=stored.planes,
+                    ndim_spatial=stored.ndim_spatial,
+                    dtype=str(stored.dtype),
+                )
+            else:
+                leaves[ukey] = np.asarray(stored)
+                meta["codec"] = "raw"
+            units[ukey] = meta
+        return leaves, {"units": units}
+
+    def load_state(
+        self,
+        leaves: Dict[str, np.ndarray],
+        meta: Dict[str, object],
+    ) -> None:
+        """Rebuild the store from a ``state_dict`` snapshot: payloads,
+        compressed-unit handles, and the version vector (host ==
+        committed at a checkpoint cut, so both maps restore equal)."""
+        self._units.clear()
+        self._versions.clear()
+        self._host_versions.clear()
+        for ukey, u in meta["units"].items():
+            key = (u["field"], u["kind"], int(u["idx"]))
+            if u["codec"] == "zfp":
+                value: object = Compressed(
+                    np.ascontiguousarray(leaves[f"{ukey}.payload"]),
+                    np.ascontiguousarray(leaves[f"{ukey}.emax"]),
+                    tuple(u["shape"]), int(u["planes"]),
+                    int(u["ndim_spatial"]), u["dtype"],
+                )
+            else:
+                value = np.ascontiguousarray(leaves[ukey])
+            self._units[key] = value
+            ver = int(u["version"])
+            self._versions[key] = ver
+            self._host_versions[key] = ver
 
     def seed(self, full: Dict[str, np.ndarray]) -> None:
         """Initial decomposition of full fields into host units.

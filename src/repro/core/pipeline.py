@@ -30,7 +30,7 @@ target: host<->HBM streaming over the v5e host link).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
 
 from repro.core.taskgraph import (  # noqa: F401  (re-exported API)
@@ -39,6 +39,7 @@ from repro.core.taskgraph import (  # noqa: F401  (re-exported API)
     build_sweep_tasks,
     get_schedule,
 )
+from repro.distributed.fault import ReissuePolicy
 
 
 @dataclass(frozen=True)
@@ -96,6 +97,9 @@ class Span:
 class Timeline:
     spans: Dict[str, Span]
     tasks: Dict[str, Task]
+    # transfer tasks whose completion came from the spare-stream
+    # reissue (ReissuePolicy mitigation), not the original attempt
+    reissued: List[str] = field(default_factory=list)
 
     @property
     def makespan(self) -> float:
@@ -142,24 +146,54 @@ def _duration(task: Task, hw: Hardware) -> float:
 
 
 def simulate(tasks: List[Task], hw: Hardware,
-             straggler: Optional[Dict[str, float]] = None) -> Timeline:
+             straggler: Optional[Dict[str, float]] = None,
+             reissue: Optional[ReissuePolicy] = None) -> Timeline:
     """List-schedule tasks on FIFO resources honouring dependencies.
+
     ``straggler`` maps task-id prefixes to slowdown factors (fault
-    injection for the mitigation tests)."""
+    injection for the mitigation tests). ``reissue`` enables the
+    straggler mitigation the live flush path integrates: a transfer
+    task (h2d/d2h resource) whose actual duration exceeds the policy
+    deadline (``factor`` x its nominal duration) is **cancelled at the
+    detection deadline and reissued on a dedicated ``spare`` stream**
+    — the issuing stream frees at the cancel (queued transfers behind
+    the straggler stop waiting), and the task completes, unblocking
+    its dependents, when the reissue lands. Reissued task ids are
+    reported in ``Timeline.reissued``.
+    """
     free: Dict[str, float] = {}
     spans: Dict[str, Span] = {}
     byid = {t.tid: t for t in tasks}
+    reissued: List[str] = []
     for t in tasks:
-        dur = _duration(t, hw)
+        nominal = _duration(t, hw)
+        dur = nominal
         if straggler:
             for prefix, slow in straggler.items():
                 if t.tid.startswith(prefix):
                     dur *= slow
         ready = max((spans[d].end for d in t.deps), default=0.0)
         start = max(free.get(t.resource, 0.0), ready)
-        spans[t.tid] = Span(start, start + dur)
-        free[t.resource] = start + dur
-    return Timeline(spans, byid)
+        end = start + dur
+        busy_until = end
+        if (
+            reissue is not None
+            and t.resource in ("h2d", "d2h")
+            and reissue.should_reissue(dur, nominal)
+        ):
+            # cancel-and-reissue: the monitor only sees "deadline
+            # passed", so the decision commits — the original attempt
+            # is killed at the deadline and the spare stream carries
+            # the nominal-duration retry
+            detect = start + reissue.deadline(nominal)
+            rstart = max(detect, free.get("spare", 0.0))
+            end = rstart + nominal
+            busy_until = detect
+            free["spare"] = end
+            reissued.append(t.tid)
+        spans[t.tid] = Span(start, end)
+        free[t.resource] = busy_until
+    return Timeline(spans, byid, reissued)
 
 
 def sweep_timeline(

@@ -73,6 +73,9 @@ class Transfer:
     # write-back residency flush (evict/gather/checkpoint) rather than
     # an in-order writeback
     flush: bool = False
+    # the transfer is a spare-stream reissue of a failed/straggling
+    # flush (ReissuePolicy mitigation on the snapshot path)
+    reissued: bool = False
 
 
 def summarize_transfers(transfers: List[Transfer]) -> Dict[str, int]:
@@ -137,7 +140,15 @@ def depth_k(k: int) -> Schedule:
 
 def get_schedule(sched: Union[str, Schedule]) -> Schedule:
     """Resolve a schedule name ("paper", "unitgrain", "overlap",
-    "depth2", "depth-3", ...) to a Schedule strategy."""
+    "depth2", "depth-3", ...) to a Schedule strategy.
+
+    >>> get_schedule("paper").codec_sync
+    True
+    >>> get_schedule("depth-3").window
+    3
+    >>> get_schedule("unitgrain").window is None
+    True
+    """
     if isinstance(sched, Schedule):
         return sched
     if sched == "paper":

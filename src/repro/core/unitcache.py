@@ -11,15 +11,38 @@ bytes only cross the link when residency is actually lost —
 * **flush-on-evict**: LRU eviction of a dirty entry returns it to the
   caller (``DepositResult.flushes``), who must materialize it to the
   host store before anything can fetch that unit again;
-* **flush-on-gather / flush-on-checkpoint**: any host-side read of the
-  field (``AsyncExecutor.gather``) or checkpoint of the host store must
-  first drain ``dirty_entries()`` — oldest (LRU) first, so the flush
-  order is deterministic and reproducible by the task-graph model.
+* **flush-on-gather**: any host-side read of the field
+  (``AsyncExecutor.gather``) first drains ``dirty_entries()`` — oldest
+  (LRU) first, so the flush order is deterministic and reproducible by
+  the task-graph model;
+* **flush-on-demand**: ``AsyncExecutor.flush()`` runs the same ordered
+  drain explicitly (multi-run campaigns that want a consistent host
+  view without gathering);
+* **flush-on-checkpoint** — the checkpoint cut, the fourth flush
+  point: ``AsyncExecutor.checkpoint`` quiesces the in-flight window
+  and runs the ordered flush before any byte is persisted, so a
+  snapshot can never capture a committed-on-device version the host
+  store has not realized. See ``docs/architecture.md``.
 
 ``policy="write-through"`` reproduces PR 2 exactly (every deposit is
 clean, every writeback materializes) for A/B benchmarking; a
 ``budget_bytes`` of 0 disables residency entirely and reduces both
 policies to the fetch-every-sweep / write-every-sweep engine.
+
+A minimal tour of the policy object (the same sequence both consumers
+replay):
+
+>>> mgr = DeviceResidencyManager(budget_bytes=100, policy="write-back")
+>>> mgr.deposit("u0", 1, "payload-bytes", 60, dirty=True).stored
+True
+>>> mgr.lookup("u0", 1)      # current version resident: H2D elided
+(True, 'payload-bytes')
+>>> res = mgr.deposit("u1", 1, "other", 60, dirty=True)  # evicts u0
+>>> [(key, ent.version) for key, ent in res.flushes]     # caller pays
+[('u0', 1)]
+>>> mgr.mark_flushed("u1")   # gather/checkpoint drain, after the put
+>>> mgr.dirty_bytes
+0
 
 The manager stays deliberately dumb and deterministic — plain LRU under
 a byte budget, pure policy, no JAX — because the *same* object is
@@ -70,6 +93,9 @@ class CacheStats:
     flushes: int = 0  # dirty payloads materialized (evict/gather/ckpt)
     flush_wire_bytes: int = 0  # link bytes the flushes paid
     dirty_bytes: int = 0  # resident bytes currently newer than host
+    # fault mitigation on the flush path (ReissuePolicy integration)
+    flush_reissues: int = 0  # failed flush puts retried on the spare stream
+    flush_stragglers: int = 0  # flush puts that exceeded the reissue deadline
 
     @property
     def lookups(self) -> int:
@@ -92,6 +118,8 @@ class CacheStats:
             "flushes": self.flushes,
             "flush_wire_bytes": self.flush_wire_bytes,
             "dirty_bytes": self.dirty_bytes,
+            "flush_reissues": self.flush_reissues,
+            "flush_stragglers": self.flush_stragglers,
             "hit_rate": self.hit_rate,
         }
 
@@ -120,7 +148,20 @@ class DeviceResidencyManager:
     """Byte-budgeted LRU over on-device unit payloads owning both
     transfer directions: read residency (H2D elision) and, under
     ``policy="write-back"``, dirty write residency (D2H elision with
-    ordered flush)."""
+    ordered flush).
+
+    Parameters
+    ----------
+    budget_bytes:
+        Residency byte budget. ``0`` (the default) disables residency
+        entirely: every ``deposit`` is refused and every lookup
+        misses, reducing the executor to fetch/write-every-sweep.
+    policy:
+        ``"write-back"`` (default) — writeback deposits are dirty and
+        their D2H is elided until a flush point; ``"write-through"`` —
+        every deposit is clean (PR 2 read-only-cache semantics, kept
+        for A/B benchmarking). Any other value raises ``ValueError``.
+    """
 
     budget_bytes: int = 0
     policy: str = "write-back"

@@ -103,7 +103,35 @@ def replan(
 
 @dataclasses.dataclass
 class ReissuePolicy:
+    """Straggler mitigation for out-of-core transfer tasks.
+
+    A transfer (in practice: a residency *flush* D2H on the snapshot
+    path) that runs longer than ``factor`` x its expected duration is
+    reissued on the spare stream instead of blocking everything queued
+    behind it. Both consumers integrate it:
+
+    * ``repro.core.pipeline.simulate(..., reissue=policy)`` replays
+      **cancel-and-reissue** on a dedicated ``spare`` resource: the
+      original attempt is killed at the detection deadline (its stream
+      frees) and completion comes from the reissue. The monitor only
+      knows "deadline passed", so the decision commits — a mild
+      straggler (just past the deadline) can finish *later* mitigated
+      than it would have unmitigated; the big win is for heavy
+      stragglers and for the transfers queued behind them. Pick
+      ``factor`` accordingly;
+    * ``repro.core.executor.AsyncExecutor(..., reissue=policy)``
+      applies it on the live flush path: a flush put that *fails* is
+      reissued (retried on the spare stream) instead of aborting the
+      snapshot, and a put that exceeds the deadline is counted as a
+      straggler (``CacheStats.flush_stragglers``).
+    """
+
     factor: float = 3.0
 
     def should_reissue(self, elapsed: float, expected: float) -> bool:
         return elapsed > self.factor * expected
+
+    def deadline(self, expected: float) -> float:
+        """Elapsed time at which a task with ``expected`` duration is
+        declared straggling and its reissue is launched."""
+        return self.factor * expected

@@ -1,0 +1,356 @@
+"""Crash-consistent checkpoint/restore of in-flight out-of-core runs.
+
+The contract (docs/architecture.md, "the checkpoint cut"):
+
+* ``AsyncExecutor.checkpoint(dir)`` quiesces the in-flight window,
+  runs the ordered flush (host store holds every unit's committed
+  bytes), and atomically persists store payloads + version vector +
+  executor progress;
+* ``AsyncExecutor.restore(dir)`` rebuilds the store, residency
+  manager, and sweep cursor, and the resumed run is **bit-identical**
+  to an uninterrupted one — across schedules and both cache policies,
+  including mid-run snapshots with dirty residents under forced
+  eviction;
+* a straggling/failed flush put is reissued through ``ReissuePolicy``
+  instead of stalling the snapshot.
+
+These tests use the raw leaf codec path (no ``zstandard`` required);
+one zstd round-trip is gated on the optional package.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core.executor import AsyncExecutor
+from repro.core.outofcore import OOCConfig, paper_code_fields
+from repro.distributed.fault import ReissuePolicy
+from repro.kernels.stencil import ref as stencil_ref
+
+SHAPE = (96, 12, 12)
+BT = 2
+EVICTING = 100_000  # budget that forces mid-run dirty evictions
+ALL_FITS = 1 << 30
+
+
+def _initial(shape=SHAPE):
+    p_cur = np.asarray(stencil_ref.ricker_source(shape), dtype=np.float32)
+    p_prev = 0.95 * p_cur
+    vel2 = np.full(shape, 0.07, dtype=np.float32)
+    return p_prev, p_cur, vel2
+
+
+def _executor(code=2, budget=EVICTING, schedule="depth2",
+              policy="write-back", **kw):
+    p_prev, p_cur, vel2 = _initial()
+    cfg = OOCConfig(SHAPE, 4, BT, paper_code_fields(code))
+    return AsyncExecutor(
+        cfg, p_prev, p_cur, vel2, schedule=schedule,
+        cache_bytes=budget, policy=policy, **kw
+    )
+
+
+# ----------------------------------------------------------------------
+# the acceptance bar: mid-sweep snapshot -> fresh executor -> bit-exact
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schedule", ["paper", "unitgrain", "depth2"])
+@pytest.mark.parametrize("policy", ["write-back", "write-through"])
+def test_midrun_checkpoint_restores_bit_identical(
+    tmp_path, schedule, policy
+):
+    """Snapshot taken mid-run — in-flight window parked, dirty
+    resident units present (write-back), eviction regime active —
+    restored into a fresh executor must finish bit-identical to an
+    uninterrupted run, for every schedule and both cache policies."""
+    ref = _executor(schedule=schedule, policy=policy)
+    ref.run(4 * BT)
+    expected = {n: ref.gather(n) for n in ("p_cur", "p_prev")}
+
+    live = _executor(schedule=schedule, policy=policy)
+    live.sweep()
+    live.sweep()  # window still parked: this is an in-flight snapshot
+    assert live.stats()["pending"] > 0
+    if policy == "write-back":
+        assert live.stats()["cache_dirty_bytes"] > 0
+        assert live.stats()["cache"]["evictions"] > 0
+    live.checkpoint(str(tmp_path))
+
+    resumed = AsyncExecutor.restore(str(tmp_path))
+    resumed.run(2 * BT)
+    for name in ("p_cur", "p_prev"):
+        np.testing.assert_array_equal(
+            resumed.gather(name), expected[name]
+        )
+
+
+def test_restore_in_new_process_bit_identical(tmp_path):
+    """The crash case proper: restore in a separate interpreter (no
+    shared state whatsoever) and finish the run there."""
+    ref = _executor()
+    ref.run(4 * BT)
+    expected = ref.gather("p_cur")
+
+    live = _executor()
+    live.run(2 * BT)
+    live.checkpoint(str(tmp_path))
+
+    code = (
+        "import sys, numpy as np\n"
+        "from repro.core.executor import AsyncExecutor\n"
+        f"ex = AsyncExecutor.restore({str(tmp_path)!r})\n"
+        f"ex.run(2 * {BT})\n"
+        f"np.save({str(tmp_path / 'out.npy')!r}, ex.gather('p_cur'))\n"
+    )
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    subprocess.run(
+        [sys.executable, "-c", code], check=True,
+        env={**os.environ, "PYTHONPATH": str(src),
+             "JAX_PLATFORMS": "cpu"},
+    )
+    out = np.load(tmp_path / "out.npy")
+    np.testing.assert_array_equal(out, expected)
+
+
+# ----------------------------------------------------------------------
+# checkpoint-cut mechanics
+# ----------------------------------------------------------------------
+
+
+def test_checkpoint_quiesces_flushes_and_records_progress(tmp_path):
+    live = _executor(code=2, budget=ALL_FITS)
+    live.sweep()
+    assert live.stats()["pending"] > 0
+    path = live.checkpoint(str(tmp_path))
+    # the cut: window drained, no dirty residency, host store current
+    st = live.stats()
+    assert st["pending"] == 0
+    assert st["cache_dirty_bytes"] == 0
+    for (field, kind, idx) in live.store._units:
+        assert live.store.host_current(field, kind, idx)
+    # progress + config persisted in the manifest's extra payload
+    extra = ckpt.read_manifest(path)["extra"]
+    assert extra["kind"] == "ooc-executor"
+    assert extra["progress"]["sweeps_done"] == 1
+    assert extra["progress"]["schedule"] == "depth2"
+    assert extra["progress"]["policy"] == "write-back"
+    assert extra["progress"]["cache_bytes"] == ALL_FITS
+    assert extra["cfg"]["shape"] == list(SHAPE)
+    # every rw unit's version vector rode along
+    vers = [u["version"] for u in extra["store"]["units"].values()]
+    assert max(vers) == 1
+
+
+def test_restore_rebuilds_cursor_config_and_versions(tmp_path):
+    live = _executor(code=4, budget=ALL_FITS, schedule="depth3")
+    live.run(3 * BT)
+    live.checkpoint(str(tmp_path))
+    resumed = AsyncExecutor.restore(str(tmp_path))
+    assert resumed.sweeps_done == 3
+    assert resumed.schedule.name == "depth3"
+    assert resumed.cache.budget_bytes == ALL_FITS
+    assert resumed.cache.policy == "write-back"
+    assert resumed.cfg.to_dict() == live.cfg.to_dict()
+    # version vector restored exactly; host is current everywhere
+    for key, ver in live.store._versions.items():
+        assert resumed.store._versions[key] == ver
+        assert resumed.store.host_current(*key)
+    # overrides are allowed (none affect numerics)
+    other = AsyncExecutor.restore(
+        str(tmp_path), schedule="paper", cache_bytes=0,
+        policy="write-through",
+    )
+    assert other.schedule.name == "paper"
+    assert not other.cache.enabled
+
+
+def test_custom_schedule_roundtrips_through_checkpoint(tmp_path):
+    """A Schedule object not resolvable by name must still restore:
+    the checkpoint persists the full strategy spec."""
+    from repro.core.taskgraph import Schedule
+
+    p_prev, p_cur, vel2 = _initial()
+    cfg = OOCConfig(SHAPE, 4, BT, paper_code_fields(2))
+    custom = Schedule("bespoke", codec_sync=True, window=3)
+    live = AsyncExecutor(cfg, p_prev, p_cur, vel2, schedule=custom,
+                         cache_bytes=EVICTING)
+    live.run(2 * BT)
+    live.checkpoint(str(tmp_path))
+    resumed = AsyncExecutor.restore(str(tmp_path))
+    assert resumed.schedule == custom
+    assert resumed.depth == 3
+
+
+def test_restore_under_different_policy_stays_bit_exact(tmp_path):
+    """Resuming a write-back run under write-through (and vice versa)
+    must not move a bit — the policies only shuffle transfers."""
+    ref = _executor(policy="write-back")
+    ref.run(4 * BT)
+    expected = ref.gather("p_cur")
+    live = _executor(policy="write-back")
+    live.run(2 * BT)
+    live.checkpoint(str(tmp_path))
+    resumed = AsyncExecutor.restore(
+        str(tmp_path), policy="write-through", cache_bytes=0
+    )
+    resumed.run(2 * BT)
+    np.testing.assert_array_equal(resumed.gather("p_cur"), expected)
+
+
+def test_checkpoint_of_stale_host_store_is_refused():
+    """state_dict must never serialize a stale host payload: snapshot
+    without the ordered flush asserts (the guard behind the 'any
+    checkpoint must flush first' rule)."""
+    live = _executor(code=2, budget=ALL_FITS)
+    live.run(2 * BT)  # drains window; dirty residents remain
+    assert live.stats()["cache_dirty_bytes"] > 0
+    with pytest.raises(AssertionError):
+        live.store.state_dict()
+
+
+def test_partial_writer_crash_leaves_latest_checkpoint_intact(tmp_path):
+    """Atomicity: a writer that dies mid-checkpoint leaves only a
+    tmp.* directory; latest()/restore keep serving the last complete
+    snapshot."""
+    live = _executor()
+    live.run(2 * BT)
+    good = live.checkpoint(str(tmp_path))
+    # a later writer crashed mid-shard: tmp dir with garbage, no rename
+    crash = tmp_path / "tmp.3"
+    crash.mkdir()
+    (crash / "half-written.bin").write_bytes(b"\x00" * 17)
+    assert ckpt.latest(str(tmp_path)) == good
+    resumed = AsyncExecutor.restore(str(tmp_path))
+    assert resumed.sweeps_done == 2
+
+
+def test_checkpoint_gc_keeps_newest(tmp_path):
+    live = _executor(code=1, budget=0)
+    for _ in range(4):
+        live.sweep()
+        live.checkpoint(str(tmp_path), keep=2)
+    names = sorted(
+        p.name for p in tmp_path.iterdir() if p.name.startswith("step_")
+    )
+    assert names == ["step_0000000003", "step_0000000004"]
+    assert AsyncExecutor.restore(str(tmp_path)).sweeps_done == 4
+
+
+def test_restore_rejects_foreign_checkpoint(tmp_path):
+    ckpt.save(str(tmp_path), 7, {"w": np.zeros((4,), np.float32)})
+    with pytest.raises(ValueError, match="not an AsyncExecutor"):
+        AsyncExecutor.restore(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        AsyncExecutor.restore(str(tmp_path / "nowhere"))
+
+
+@pytest.mark.skipif(not ckpt.HAVE_ZSTD, reason="zstandard not installed")
+def test_checkpoint_roundtrip_with_zstd(tmp_path):
+    ref = _executor()
+    ref.run(3 * BT)
+    expected = ref.gather("p_cur")
+    live = _executor()
+    live.run(2 * BT)
+    live.checkpoint(str(tmp_path), zstd_level=3)
+    resumed = AsyncExecutor.restore(str(tmp_path))
+    resumed.run(BT)
+    np.testing.assert_array_equal(resumed.gather("p_cur"), expected)
+
+
+# ----------------------------------------------------------------------
+# ReissuePolicy on the flush path
+# ----------------------------------------------------------------------
+
+
+def _flaky_store(live, fail_times=1):
+    """Make the next ``fail_times`` store puts raise, then recover."""
+    orig_put = live.store.put
+    state = {"left": fail_times, "reissued_puts": 0}
+
+    def flaky(field, kind, idx, value, version=None):
+        if state["left"] > 0:
+            state["left"] -= 1
+            raise RuntimeError("injected flush fault")
+        return orig_put(field, kind, idx, value, version=version)
+
+    live.store.put = flaky
+    return state
+
+
+def test_failed_flush_without_policy_still_raises(tmp_path):
+    live = _executor(code=2, budget=ALL_FITS)
+    live.run(2 * BT)
+    _flaky_store(live)
+    with pytest.raises(RuntimeError, match="injected flush fault"):
+        live.checkpoint(str(tmp_path))
+    # nothing was marked clean early: the failed unit is still dirty
+    assert live.stats()["cache_dirty_bytes"] > 0
+
+
+def test_failed_flush_is_reissued_and_snapshot_completes(tmp_path):
+    """The ROADMAP mitigation item: with a ReissuePolicy attached, a
+    transiently failing flush put is reissued on the spare stream —
+    the snapshot completes in one call and the restored run is
+    bit-exact."""
+    ref = _executor(code=2, budget=ALL_FITS)
+    ref.run(4 * BT)
+    expected = ref.gather("p_cur")
+
+    live = _executor(code=2, budget=ALL_FITS,
+                     reissue=ReissuePolicy(factor=3.0))
+    live.run(2 * BT)
+    _flaky_store(live)
+    live.checkpoint(str(tmp_path))  # does not raise
+    st = live.stats()["cache"]
+    assert st["flush_reissues"] == 1
+    assert live.stats()["cache_dirty_bytes"] == 0
+    assert sum(t.reissued for t in live.transfers) == 1
+
+    resumed = AsyncExecutor.restore(str(tmp_path))
+    resumed.run(2 * BT)
+    np.testing.assert_array_equal(resumed.gather("p_cur"), expected)
+
+
+def test_double_fault_on_one_flush_propagates(tmp_path):
+    """One reissue per flush put: a unit whose put fails twice raises
+    (and stays dirty for retry) — no infinite retry loop."""
+    live = _executor(code=2, budget=ALL_FITS,
+                     reissue=ReissuePolicy(factor=3.0))
+    live.run(2 * BT)
+    _flaky_store(live, fail_times=2)
+    with pytest.raises(RuntimeError, match="injected flush fault"):
+        live.checkpoint(str(tmp_path))
+    assert live.stats()["cache_dirty_bytes"] > 0
+    live.checkpoint(str(tmp_path))  # retry flushes the remainder
+    assert live.stats()["cache_dirty_bytes"] == 0
+
+
+def test_straggling_flush_put_is_detected():
+    """A flush put slower than the policy deadline (vs the median of
+    previous flushes) is counted — the live-side signal mirroring the
+    model's spare-stream reissue (which the DES prices; see
+    tests/test_pipeline.py)."""
+    live = _executor(code=2, budget=ALL_FITS,
+                     reissue=ReissuePolicy(factor=3.0))
+    live.run(2 * BT)
+    ndirty = len(live.cache.dirty_entries())
+    assert ndirty >= 2
+    # deterministic fake clock: flush k takes 1s, ..., 1s, 50s (last)
+    times = []
+    t = 0.0
+    for i in range(ndirty):
+        times.append(t)
+        t += 50.0 if i == ndirty - 1 else 1.0
+        times.append(t)
+    it = iter(times)
+    live._timer = lambda: next(it)
+    live.flush()
+    st = live.stats()["cache"]
+    assert st["flush_stragglers"] == 1
+    assert st["flush_reissues"] == 0  # slow, but it did land

@@ -120,6 +120,46 @@ def test_straggler_on_flush_preserves_hazard_edges():
         assert slow.spans[t.tid].start >= slow.spans[flush_tid].end - 1e-12
 
 
+def test_reissue_caps_straggling_flush_in_model():
+    """ReissuePolicy integration, model side: a 50x-straggling flush
+    D2H with the policy active is reissued on the spare stream at the
+    detection deadline — dependents unblock at the reissue's landing,
+    the makespan win is real, and every hazard edge still holds."""
+    from repro.distributed.fault import ReissuePolicy
+
+    tasks, _ = _evicting_tasks()
+    flush_tid = next(t.tid for t in tasks if t.flush)
+    pol = ReissuePolicy(factor=3.0)
+    base = simulate(tasks, V100_PCIE)
+    slow = simulate(tasks, V100_PCIE, straggler={flush_tid: 50.0})
+    fixed = simulate(
+        tasks, V100_PCIE, straggler={flush_tid: 50.0}, reissue=pol
+    )
+    assert base.makespan <= fixed.makespan < slow.makespan
+    assert fixed.reissued == [flush_tid]
+    # the straggling task now completes at deadline + one nominal run
+    nominal = base.spans[flush_tid].end - base.spans[flush_tid].start
+    start = fixed.spans[flush_tid].start
+    assert fixed.spans[flush_tid].end == pytest.approx(
+        start + pol.deadline(nominal) + nominal
+    )
+    for t in tasks:  # dependency order survives the mitigation
+        for d in t.deps:
+            assert fixed.spans[d].end <= fixed.spans[t.tid].start + 1e-12
+
+
+def test_reissue_without_stragglers_is_inert():
+    from repro.distributed.fault import ReissuePolicy
+
+    tasks, _ = _evicting_tasks()
+    base = simulate(tasks, V100_PCIE)
+    mitigated = simulate(
+        tasks, V100_PCIE, reissue=ReissuePolicy(factor=3.0)
+    )
+    assert mitigated.reissued == []
+    assert mitigated.makespan == pytest.approx(base.makespan)
+
+
 def test_writeback_replay_prices_d2h_elision():
     """Fig. 5/6 pricing of the write-back policy: with the working set
     resident, the write-back timeline moves strictly fewer d2h wire

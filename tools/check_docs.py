@@ -1,0 +1,99 @@
+"""Docs gate for CI: markdown link check + runnable README snippets.
+
+Two responsibilities, stdlib only:
+
+1. **Link check** — every relative markdown link in README.md,
+   ROADMAP.md, and docs/*.md must resolve to a file or directory in
+   the repo (external http(s)/mailto links and pure #anchors are
+   skipped, as are GitHub-web-relative links like the CI badge that
+   deliberately escape the repo root).
+2. **Snippet check** — every ```python fenced block in README.md and
+   docs/*.md is executed (in one fresh namespace per file, inside a
+   temp working directory) so documented quickstarts cannot rot.
+   Mark a block non-runnable by fencing it as ```text instead.
+
+Run from the repo root:  PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = sorted(
+    [ROOT / "README.md", ROOT / "ROADMAP.md"]
+    + list((ROOT / "docs").glob("*.md"))
+)
+
+# [text](target) — excluding images handled the same way via the same
+# pattern (the leading ! just ends up in the link text)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def check_links() -> list[str]:
+    errors = []
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        for target in _LINK_RE.findall(text):
+            if "://" in target or target.startswith(("#", "mailto:")):
+                continue
+            rel = target.split("#")[0]
+            if rel.startswith("/"):
+                # root-absolute (GitHub renders these repo-relative)
+                path = (ROOT / rel.lstrip("/")).resolve()
+            else:
+                path = (doc.parent / rel).resolve()
+            if not path.is_relative_to(ROOT):
+                continue  # GitHub-web-relative (e.g. the CI badge)
+            if not path.exists():
+                errors.append(f"{doc.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def run_snippets() -> list[str]:
+    errors = []
+    for doc in DOC_FILES:
+        blocks = _FENCE_RE.findall(doc.read_text())
+        if not blocks:
+            continue
+        # one namespace per file so multi-block quickstarts can build
+        # on earlier blocks; cwd is a scratch dir (snippets may write
+        # checkpoints)
+        ns: dict = {"__name__": f"snippet:{doc.name}"}
+        with tempfile.TemporaryDirectory() as td:
+            import os
+
+            old = os.getcwd()
+            os.chdir(td)
+            try:
+                for i, block in enumerate(blocks):
+                    try:
+                        exec(compile(block, f"{doc.name}[{i}]", "exec"), ns)
+                    except Exception as e:  # noqa: BLE001 - report all
+                        errors.append(
+                            f"{doc.relative_to(ROOT)} python block {i}: "
+                            f"{type(e).__name__}: {e}"
+                        )
+                        break
+            finally:
+                os.chdir(old)
+    return errors
+
+
+def main() -> int:
+    errors = check_links()
+    print(f"link check: {len(DOC_FILES)} files, "
+          f"{'OK' if not errors else 'FAIL'}")
+    snippet_errors = run_snippets()
+    print(f"snippet check: {'OK' if not snippet_errors else 'FAIL'}")
+    for e in errors + snippet_errors:
+        print(f"  {e}", file=sys.stderr)
+    return 1 if errors or snippet_errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
