@@ -22,19 +22,23 @@ SMOKE_OUT = "BENCH_smoke.json"
 def smoke(out_path: str = SMOKE_OUT) -> dict:
     """Tiny-grid fig5/fig6 sweep: live wire-byte accounting (uncached
     vs write-through vs write-back residency) + modeled sweep times,
-    as one JSON artifact. Asserts the three invariants CI keeps
+    as one JSON artifact. Asserts the four invariants CI keeps
     holding: residency drives per-sweep H2D to below-uncached levels,
     the write-back policy drives interior per-sweep D2H to exactly
-    zero, and the checkpoint round trip (quiesce + ordered flush +
-    atomic persist + restore) is lossless."""
+    zero, the checkpoint round trip (quiesce + ordered flush + atomic
+    persist + restore) is lossless, and the overlapped periodic
+    snapshot stalls the sweep loop less than the quiesced one (live
+    boundary blocking AND modeled makespan). Also records the
+    compression-precision error curve (Fig. 7 trajectory)."""
     import pathlib
     import tempfile
 
     import numpy as np
 
-    from repro.core.executor import AsyncExecutor
+    from repro.core.executor import AsyncExecutor, CheckpointPolicy
     from repro.core.outofcore import OOCConfig, paper_code_fields
     from repro.core.pipeline import V100_PCIE, sweep_timeline
+    from repro.core.precision import assert_bounded_growth, error_curve
     from repro.kernels.stencil import ref as stencil_ref
 
     shape, ndiv, bt, sweeps = (96, 16, 16), 4, 2, 3
@@ -142,6 +146,60 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
             "roundtrip_bit_identical": roundtrip_ok,
         }
         assert roundtrip_ok, (code, row)
+        # periodic checkpointing: overlapped cut (pin + ride the next
+        # sweep) vs quiesced cut (drain at the boundary), same cadence
+        ck_row = {}
+        for mode in ("overlapped", "quiesced"):
+            eng = AsyncExecutor(
+                cfg, p_prev, p_cur, vel2, schedule="depth2",
+                cache_bytes=1 << 30, policy="write-back",
+            )
+            with tempfile.TemporaryDirectory() as td:
+                t0 = time.perf_counter()
+                eng.run(sweeps * bt, ckpt_policy=CheckpointPolicy(
+                    td, every_sweeps=1, mode=mode,
+                ))
+                wall = time.perf_counter() - t0
+            cs = eng.stats()["checkpoint"]
+            cache = eng.stats()["cache"]
+            ck_row[mode] = {
+                "run_wall_s": round(wall, 4),
+                "snapshots": cs["snapshots"],
+                # the stall the snapshots injected at sweep boundaries
+                "boundary_block_s": round(cs["boundary_block_s"], 6),
+                "ckpt_flush_wire": cache["ckpt_flush_wire_bytes"],
+                "pins": cache["pins"],
+                "cow_shadows": cache["cow_shadows"],
+            }
+        mo, mq = {}, {}
+        ck_row["modeled"] = {
+            "overlapped_makespan_s": round(sweep_timeline(
+                cfg, V100_PCIE, sweeps=sweeps, schedule="depth2",
+                cache_bytes=1 << 30, stats=mo,
+                ckpt_every=1, ckpt_mode="overlapped",
+            ).makespan, 6),
+            "quiesced_makespan_s": round(sweep_timeline(
+                cfg, V100_PCIE, sweeps=sweeps, schedule="depth2",
+                cache_bytes=1 << 30, stats=mq,
+                ckpt_every=1, ckpt_mode="quiesced",
+            ).makespan, 6),
+            "ckpt_tasks": mo["ckpt_tasks"],
+        }
+        row["periodic_ckpt"] = ck_row
+        # invariant 4 (PR 5): the overlapped snapshot stalls the sweep
+        # loop less than the quiesced one (live wall at the boundary)
+        # and the modeled timeline prices the same win
+        assert ck_row["overlapped"]["snapshots"] == (
+            ck_row["quiesced"]["snapshots"]
+        ) > 0, (code, ck_row)
+        assert (
+            ck_row["overlapped"]["boundary_block_s"]
+            < ck_row["quiesced"]["boundary_block_s"]
+        ), (code, ck_row)
+        assert (
+            ck_row["modeled"]["overlapped_makespan_s"]
+            < ck_row["modeled"]["quiesced_makespan_s"]
+        ), (code, ck_row)
         mstats = {}
         tl = sweep_timeline(
             cfg, V100_PCIE, sweeps=sweeps, schedule="depth2",
@@ -159,6 +217,16 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
             "model_hit_rate": round(mstats["hit_rate"], 4),
         }
         result["codes"][f"code{code}"] = row
+    # precision trajectory (paper Fig. 7 / §VI-C as a tracked series):
+    # lossy out-of-core error vs the exact in-core reference; the
+    # regression tier (tests/test_precision_loss.py) holds the same
+    # curves under tighter calibrated bounds
+    precision = {}
+    for code, rel_tol in ((2, 0.02), (4, 0.15)):
+        curve = error_curve(code=code, sweeps=6, sample_every=2)
+        assert_bounded_growth(curve, rel_tol)
+        precision[f"code{code}"] = curve
+    result["precision"] = precision
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
     print(f"# wrote {out_path}", file=sys.stderr)

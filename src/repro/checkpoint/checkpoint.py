@@ -66,6 +66,136 @@ def _flatten(tree) -> Dict[str, Any]:
     return out
 
 
+class ShardWriter:
+    """Incremental checkpoint writer: one durable shard at a time.
+
+    The atomic-persist machinery of ``save`` (tmp dir, per-shard
+    fsync, manifest fsync, ``os.replace`` publish, gc) factored into a
+    stateful writer so a snapshot can be persisted *incrementally* —
+    the out-of-core executor's overlapped checkpoint drains one frozen
+    unit payload per block visit of the next sweep instead of writing
+    the whole tree in one blocking call. Until ``finalize`` the
+    checkpoint lives in ``tmp.<step>/``, which ``latest()`` ignores: a
+    writer that dies mid-snapshot leaves the previous checkpoint
+    intact (crash consistency is unchanged from the one-shot path).
+
+    Usage::
+
+        w = ShardWriter(dir, step, zstd_level=0, extra=progress)
+        for key, arr in leaves:      # any pace, any interleaving
+            w.add(key, arr)
+        path = w.finalize(keep=3)    # publish step_<k>, gc old ones
+
+    ``add`` may be called with the same options semantics as ``save``
+    (zstd / raw leaf codec, optional lossy-ZFP f32 leaves); ``abort``
+    discards the tmp dir. ``extra`` may also be replaced any time
+    before ``finalize`` via ``set_extra`` (e.g. a version vector
+    frozen at the cut but enriched while draining).
+    """
+
+    def __init__(
+        self,
+        directory: str,
+        step: int,
+        *,
+        zstd_level: Optional[int] = None,
+        lossy_planes: Optional[int] = None,
+        extra: Optional[Dict[str, Any]] = None,
+    ):
+        if zstd_level is None:
+            zstd_level = 3 if HAVE_ZSTD else 0
+        self._cctx = (
+            _require_zstd().ZstdCompressor(level=zstd_level)
+            if zstd_level > 0 else None
+        )
+        self._base_codec = "zstd" if self._cctx else "raw"
+        self._lossy_planes = lossy_planes
+        self.step = int(step)
+        self.base = pathlib.Path(directory)
+        self.base.mkdir(parents=True, exist_ok=True)
+        self.tmp = self.base / f"tmp.{step}"
+        if self.tmp.exists():
+            shutil.rmtree(self.tmp)
+        self.tmp.mkdir()
+        self._manifest: Dict[str, Any] = {
+            "step": self.step, "leaves": {}, "extra": extra or {},
+        }
+        self._finalized = False
+
+    def set_extra(self, extra: Dict[str, Any]) -> None:
+        self._manifest["extra"] = extra
+
+    def add(self, key: str, leaf) -> int:
+        """Durably write one leaf shard; returns its on-disk bytes."""
+        assert not self._finalized, "writer already finalized"
+        arr = np.asarray(leaf)
+        fname = key.replace(_FLAT_SEP, "__") + (
+            ".zst" if self._cctx else ".bin"
+        )
+        entry = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "codec": self._base_codec,
+        }
+        if (
+            self._lossy_planes
+            and arr.dtype == np.float32
+            and arr.size >= 1024
+        ):
+            c = zfp_ops.compress(
+                jnp.asarray(arr.reshape(-1)),
+                planes=self._lossy_planes, ndim=1,
+            )
+            payload = np.asarray(c.payload)
+            emax = np.asarray(c.emax).astype(np.int16)
+            blob = (
+                len(payload).to_bytes(8, "little")
+                + payload.tobytes()
+                + emax.tobytes()
+            )
+            entry.update(
+                codec=f"zfp+{self._base_codec}",
+                planes=self._lossy_planes,
+                payload_words=int(payload.shape[1]),
+            )
+        else:
+            blob = arr.tobytes()
+        if self._cctx:
+            blob = self._cctx.compress(blob)
+        _write_durable(self.tmp / fname, blob)
+        self._manifest["leaves"][key] = entry
+        return len(blob)
+
+    def finalize(self, keep: int = 3) -> str:
+        """Write the manifest, publish ``step_<k>`` atomically, gc."""
+        assert not self._finalized, "writer already finalized"
+        _write_durable(
+            self.tmp / "manifest.json",
+            json.dumps(self._manifest).encode(),
+        )
+        # every shard and the manifest are fsynced above; sync the tmp
+        # dir (directory entries) before the rename, and the parent
+        # after, so the published step_<k> is durable as a whole — a
+        # crash at any point leaves either the previous checkpoint or
+        # this complete one
+        _fsync_dir(self.tmp)
+        final = self.base / f"step_{self.step:010d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(self.tmp, final)
+        _fsync_dir(self.base)
+        _gc(self.base, keep)
+        self._finalized = True
+        return str(final)
+
+    def abort(self) -> None:
+        """Discard the tmp dir; the previous checkpoint stays live."""
+        if not self._finalized and self.tmp.exists():
+            shutil.rmtree(self.tmp)
+        self._finalized = True
+
+
 def save(
     directory: str,
     step: int,
@@ -86,71 +216,21 @@ def save(
     ``extra`` is embedded verbatim (JSON) in the manifest and returned
     by ``load``/``read_manifest`` — writer-defined context such as the
     out-of-core executor's progress record. Returns the final path.
+
+    One-shot wrapper over ``ShardWriter`` (incremental writers share
+    the identical durability machinery).
     """
-    if zstd_level is None:
-        zstd_level = 3 if HAVE_ZSTD else 0
-    cctx = (
-        _require_zstd().ZstdCompressor(level=zstd_level)
-        if zstd_level > 0 else None
+    w = ShardWriter(
+        directory, step, zstd_level=zstd_level,
+        lossy_planes=lossy_planes, extra=extra,
     )
-    base_codec = "zstd" if cctx else "raw"
-    base = pathlib.Path(directory)
-    base.mkdir(parents=True, exist_ok=True)
-    tmp = base / f"tmp.{step}"
-    if tmp.exists():
-        shutil.rmtree(tmp)
-    tmp.mkdir()
-    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
-    for key, leaf in _flatten(tree).items():
-        arr = np.asarray(leaf)
-        fname = key.replace(_FLAT_SEP, "__") + (
-            ".zst" if cctx else ".bin"
-        )
-        entry = {
-            "file": fname,
-            "shape": list(arr.shape),
-            "dtype": str(arr.dtype),
-            "codec": base_codec,
-        }
-        if (
-            lossy_planes
-            and arr.dtype == np.float32
-            and arr.size >= 1024
-        ):
-            c = zfp_ops.compress(
-                jnp.asarray(arr.reshape(-1)), planes=lossy_planes, ndim=1
-            )
-            payload = np.asarray(c.payload)
-            emax = np.asarray(c.emax).astype(np.int16)
-            blob = (
-                len(payload).to_bytes(8, "little")
-                + payload.tobytes()
-                + emax.tobytes()
-            )
-            entry.update(
-                codec=f"zfp+{base_codec}",
-                planes=lossy_planes,
-                payload_words=int(payload.shape[1]),
-            )
-        else:
-            blob = arr.tobytes()
-        _write_durable(
-            tmp / fname, cctx.compress(blob) if cctx else blob
-        )
-        manifest["leaves"][key] = entry
-    _write_durable(tmp / "manifest.json", json.dumps(manifest).encode())
-    # every shard and the manifest are fsynced above; sync the tmp dir
-    # (directory entries) before the rename, and the parent after, so
-    # the published step_<k> is durable as a whole — a crash at any
-    # point leaves either the previous checkpoint or this complete one
-    _fsync_dir(tmp)
-    final = base / f"step_{step:010d}"
-    if final.exists():
-        shutil.rmtree(final)
-    os.replace(tmp, final)
-    _fsync_dir(base)
-    _gc(base, keep)
-    return str(final)
+    try:
+        for key, leaf in _flatten(tree).items():
+            w.add(key, leaf)
+    except BaseException:
+        w.abort()
+        raise
+    return w.finalize(keep=keep)
 
 
 def _write_durable(path: pathlib.Path, blob: bytes) -> None:

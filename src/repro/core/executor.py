@@ -52,15 +52,26 @@ when residency is lost:
 * **flush-on-gather / flush-on-demand** — ``flush()`` drains every
   dirty entry to the host store in deterministic LRU order;
   ``gather()`` calls it;
-* **flush-on-checkpoint** — the checkpoint cut, the fourth flush
-  point: ``checkpoint(dir)`` quiesces the in-flight window
-  (``finish()``), runs the ordered ``flush()``, and atomically
-  persists the host store payloads + per-unit version vector +
-  executor progress through ``repro.checkpoint.checkpoint``;
-  ``AsyncExecutor.restore(dir)`` rebuilds the store, the residency
-  manager, and the sweep cursor, and resumes **bit-identically** to an
-  uninterrupted run (the transfer log differs — residency restarts
-  cold — but not one output bit does).
+* **flush-on-checkpoint (quiesced)** — the PR 4 checkpoint cut:
+  ``checkpoint(dir)`` quiesces the in-flight window (``finish()``),
+  runs the ordered ``flush()``, and atomically persists the host
+  store payloads + per-unit version vector + executor progress
+  through ``repro.checkpoint.checkpoint``; ``AsyncExecutor.
+  restore(dir)`` rebuilds the store, the residency manager, and the
+  sweep cursor, and resumes **bit-identically** to an uninterrupted
+  run (the transfer log differs — residency restarts cold — but not
+  one output bit does);
+* **overlapped checkpoint cut** — the fifth flush point:
+  ``begin_checkpoint(dir)`` (or ``run(..., ckpt_policy=
+  CheckpointPolicy(...))`` for periodic every-k-sweeps / wall-budget
+  snapshots) freezes the unit-version vector at a sweep boundary
+  WITHOUT draining the window: dirty residents are pinned
+  copy-on-write in the residency manager and their snapshot D2H
+  drains one chunk per block visit of the next sweep through the
+  incremental ``repro.checkpoint.ShardWriter`` — the snapshot rides
+  the pipeline instead of stalling it, and publishes atomically when
+  the last shard lands. Restoring it is indistinguishable from
+  restoring a quiesced snapshot of the same boundary.
 
 A straggling or failed flush D2H need not block the snapshot: with a
 ``repro.distributed.fault.ReissuePolicy`` attached, a failed flush put
@@ -91,6 +102,7 @@ import pathlib
 import statistics
 import time
 from collections import deque
+from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import jax
@@ -98,7 +110,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
-from repro.core.outofcore import HostUnitStore, OOCConfig
+from repro.core.outofcore import HostUnitStore, OOCConfig, unit_shards
 from repro.core.taskgraph import (
     Schedule,
     Task,
@@ -120,6 +132,73 @@ UnitKey = Tuple[str, Tuple[str, int]]  # (field, (kind, idx))
 
 # one parked visit: (producing sweep, [(task, value, raw, version)])
 _Parked = Tuple[int, List[Tuple[Task, object, int, int]]]
+
+
+@dataclass
+class CheckpointPolicy:
+    """Periodic in-loop checkpointing policy for ``AsyncExecutor.run``.
+
+    Consulted at every sweep boundary; a due trigger snapshots the run
+    *without stopping it*. Two triggers, combinable (either fires):
+
+    ``every_sweeps``
+        snapshot after every k completed sweeps;
+    ``wall_budget_s``
+        snapshot whenever this much wall time passed since the last
+        one (preemption-window checkpointing).
+
+    ``mode`` selects the cut mechanics:
+
+    ``"overlapped"`` (default)
+        the overlapped checkpoint cut (``begin_checkpoint``): freeze
+        the unit-version vector at the boundary, pin the dirty
+        residents (copy-on-write), and drain the snapshot's flush-D2H
+        while the next sweep computes — the boundary itself blocks for
+        microseconds, not for a quiesce;
+    ``"quiesced"``
+        the PR 4 cut (``checkpoint``): drain the window, ordered
+        flush, one blocking persist — kept for A/B measurement and for
+        hosts where snapshot memory pressure (pinned bytes) must be
+        zero.
+
+    ``zstd_level``/``keep`` pass through to the persist layer.
+    """
+
+    directory: str
+    every_sweeps: Optional[int] = None
+    wall_budget_s: Optional[float] = None
+    mode: str = "overlapped"
+    zstd_level: Optional[int] = None
+    keep: int = 3
+
+    def __post_init__(self):
+        if self.mode not in ("overlapped", "quiesced"):
+            raise ValueError(
+                f"unknown checkpoint mode {self.mode!r}; "
+                "expected 'overlapped' or 'quiesced'"
+            )
+        if self.every_sweeps is None and self.wall_budget_s is None:
+            raise ValueError(
+                "CheckpointPolicy needs every_sweeps and/or wall_budget_s"
+            )
+        if self.every_sweeps is not None and self.every_sweeps < 1:
+            raise ValueError(
+                f"every_sweeps must be >= 1, got {self.every_sweeps}"
+            )
+
+    def due(self, sweeps_done: int, elapsed_s: float) -> bool:
+        """Whether a snapshot is due at this sweep boundary.
+
+        ``sweeps_done`` is the boundary index (completed sweeps);
+        ``elapsed_s`` the wall time since the previous snapshot (or
+        run start).
+        """
+        if self.every_sweeps and sweeps_done % self.every_sweeps == 0:
+            return True
+        return (
+            self.wall_budget_s is not None
+            and elapsed_s >= self.wall_budget_s
+        )
 
 
 def _payload_nbytes(value) -> int:
@@ -229,6 +308,27 @@ class AsyncExecutor:
         # visits whose d2h tasks are parked, oldest first; survives
         # sweep boundaries (the cross-sweep window)
         self._pending: Deque[_Parked] = deque()
+        # overlapped checkpoint in flight (begin_checkpoint): the
+        # incremental shard writer plus the frozen cut's two queues —
+        # pinned dirty residents awaiting their snapshot D2H, and
+        # host-current payload references awaiting their shard write
+        self._ckpt_writer: Optional[ckpt.ShardWriter] = None
+        self._ckpt_queue: Deque[Tuple[UnitKey, int]] = deque()
+        self._ckpt_host_queue: Deque[
+            Tuple[str, str, int, object, int]
+        ] = deque()
+        self._ckpt_units_meta: Dict[str, Dict[str, object]] = {}
+        self._ckpt_extra: Dict[str, object] = {}
+        self._ckpt_chunk = 0
+        self._ckpt_host_chunk = 0
+        self._ckpt_keep = 3
+        self._ckpt_cut_sweep = -1
+        self._ckpt_expected_units = 0
+        self.last_checkpoint_path: Optional[str] = None
+        self.ckpt_stats: Dict[str, object] = {
+            "snapshots": 0, "overlapped": 0, "quiesced": 0,
+            "boundary_block_s": 0.0, "drain_s": 0.0, "shard_bytes": 0,
+        }
 
     # ------------------------------------------------------------------
     # window management
@@ -475,6 +575,11 @@ class AsyncExecutor:
             btasks = self._by_block[i]
             # window admission precedes this visit's first transfer
             self._admit()
+            # one chunk of an in-flight overlapped snapshot drains
+            # here, interleaved with this visit's fetch/compute — the
+            # snapshot's flush-D2H rides the sweep instead of stalling
+            # it (same cadence the checkpoint-aware graph replays)
+            self._drain_ckpt(paced=True)
             for t in (t for t in btasks if t.kind == "h2d"):
                 self._exec_h2d(t)
             self._exec_decompress(
@@ -493,7 +598,9 @@ class AsyncExecutor:
         on host (write-through / lost residency) or on device
         (write-back commits). Dirty-resident payloads stay resident;
         call ``flush()`` (or ``gather()``, which does) before any
-        host-side read of the store."""
+        host-side read of the store. An in-flight overlapped snapshot
+        is force-completed first."""
+        self._drain_ckpt()
         self._drain_all()
 
     def flush(self) -> int:
@@ -513,6 +620,7 @@ class AsyncExecutor:
         prices the corresponding spare-stream win — see
         ``repro.core.pipeline.simulate``).
         """
+        self._drain_ckpt()  # release snapshot pins before flushing
         n = 0
         for key, ent in self.cache.dirty_entries():
             t0 = self._timer()
@@ -547,11 +655,265 @@ class AsyncExecutor:
             n += 1
         return n
 
-    def run(self, total_steps: int) -> None:
+    def run(
+        self,
+        total_steps: int,
+        ckpt_policy: Optional[CheckpointPolicy] = None,
+    ) -> None:
+        """Advance the run by ``total_steps`` (a multiple of ``bt``).
+
+        With ``ckpt_policy`` the loop consults the policy at every
+        sweep boundary and snapshots when due — overlapped (default:
+        the cut pins and the flush-D2H rides the next sweep) or
+        quiesced per ``policy.mode``. The final ``finish()`` completes
+        any snapshot still draining, so ``run`` always returns with
+        the last due checkpoint published (``last_checkpoint_path``).
+        """
         assert total_steps % self.cfg.bt == 0
+        last_ckpt = self._timer()
         for _ in range(total_steps // self.cfg.bt):
             self.sweep()
+            if ckpt_policy is not None and ckpt_policy.due(
+                self.sweeps_done, self._timer() - last_ckpt
+            ):
+                t0 = self._timer()
+                if ckpt_policy.mode == "quiesced":
+                    self.checkpoint(
+                        ckpt_policy.directory,
+                        zstd_level=ckpt_policy.zstd_level,
+                        keep=ckpt_policy.keep,
+                    )
+                else:
+                    self.begin_checkpoint(
+                        ckpt_policy.directory,
+                        zstd_level=ckpt_policy.zstd_level,
+                        keep=ckpt_policy.keep,
+                    )
+                self.ckpt_stats["boundary_block_s"] += (
+                    self._timer() - t0
+                )
+                last_ckpt = self._timer()
         self.finish()
+
+    # ------------------------------------------------------------------
+    # overlapped periodic checkpointing (the fifth flush point)
+    # ------------------------------------------------------------------
+    def _progress_extra(self) -> Dict[str, object]:
+        """Manifest ``extra`` payload shared by both checkpoint cuts:
+        config + executor progress (store meta is appended by each)."""
+        return {
+            "format": CKPT_FORMAT,
+            "kind": "ooc-executor",
+            "cfg": self.cfg.to_dict(),
+            "progress": {
+                "sweeps_done": self.sweeps_done,
+                "schedule": self.schedule.name,
+                # full strategy fields, so a custom Schedule object
+                # (not resolvable by name) still restores
+                "schedule_spec": {
+                    "name": self.schedule.name,
+                    "codec_sync": self.schedule.codec_sync,
+                    "window": self.schedule.window,
+                },
+                "depth": self.depth,
+                "cache_bytes": self.cache.budget_bytes,
+                "policy": self.cache.policy,
+            },
+        }
+
+    def _early_commit_parked(self) -> None:
+        """Commit every parked writeback that has NO dirty residency to
+        the host store, without draining the window.
+
+        Part of the overlapped cut: a parked payload whose bytes are
+        dirty-resident will be captured through its (pinned) cache
+        entry, but one whose deposit was refused (budget 0/too small)
+        or whose policy is write-through exists only in the window — so
+        its ordinary d2h happens *now* (the same put, the same transfer
+        record, just earlier than its drain) and the snapshot reads the
+        host bytes. The window stays parked: visits keep overlapping.
+        """
+        for i, (sweep_no, parked) in enumerate(self._pending):
+            kept: List[Tuple[Task, object, int, int]] = []
+            for task, value, raw, ver in parked:
+                kind, idx = task.unit
+                key = (task.field, task.unit)
+                if self.store.version_of(task.field, kind, idx) >= ver:
+                    continue  # an eviction flush already committed it
+                if self.cache.enabled and self.cache.write_back:
+                    ent = self.cache.peek(key)
+                    if ent is not None and ent.dirty and ent.version >= ver:
+                        kept.append((task, value, raw, ver))
+                        continue  # snapshot pins the dirty resident
+                wire = self.store.put(
+                    task.field, kind, idx, value, version=ver
+                )
+                self.transfers.append(Transfer(
+                    "d2h", task.field, task.unit, raw, wire,
+                    sweep_no, task.block,
+                ))
+            self._pending[i] = (sweep_no, kept)
+
+    def begin_checkpoint(
+        self,
+        directory: str,
+        *,
+        zstd_level: Optional[int] = None,
+        keep: int = 3,
+    ) -> None:
+        """The **overlapped checkpoint cut** — snapshot a live run at a
+        sweep boundary *without draining the in-flight window*.
+
+        The cut freezes the unit-version vector at this boundary and
+        classifies every unit:
+
+        * **host-current** — the committed payload is on host: its
+          object reference is captured (puts replace, never mutate) and
+          the shard write is deferred;
+        * **dirty-resident** — the committed payload lives only on
+          device: the entry is **pinned** in the residency manager
+          (copy-on-write — a newer writeback shadows the pre-cut
+          payload instead of dropping it, and eviction skips it) and
+          its snapshot D2H joins the background flush queue;
+        * **parked-without-residency** — committed early
+          (``_early_commit_parked``): its ordinary d2h just happens at
+          the cut instead of at drain.
+
+        The boundary call itself does no D2H and no file IO — it
+        blocks for the classification only. The queues then drain as
+        ordinary paced transfers overlapping the next sweep's
+        fetch/compute (a chunk per block visit), through the
+        incremental ``repro.checkpoint.ShardWriter``; the snapshot
+        publishes (atomic ``os.replace``) when the last shard lands.
+        ``finish()``/``flush()``/``gather()``/``checkpoint()`` and a
+        subsequent cut all force-complete an in-flight snapshot first.
+
+        The persisted snapshot is indistinguishable from a quiesced
+        ``checkpoint()`` taken at the same boundary: ``restore``
+        resumes bit-identically from either.
+        """
+        self._drain_ckpt()  # at most one snapshot in flight
+        self._early_commit_parked()
+        self._ckpt_extra = self._progress_extra()
+        self._ckpt_writer = ckpt.ShardWriter(
+            directory, self.sweeps_done,
+            zstd_level=zstd_level, extra=self._ckpt_extra,
+        )
+        self._ckpt_keep = keep
+        self._ckpt_cut_sweep = self.sweeps_done - 1
+        self._ckpt_units_meta = {}
+        unit_keys = self.store.unit_keys()
+        self._ckpt_expected_units = len(unit_keys)
+        for (field, kind, idx) in unit_keys:
+            key: UnitKey = (field, (kind, idx))
+            ver = self._ver.get(
+                key, self.store.version_of(field, kind, idx)
+            )
+            if self.store.host_version_of(field, kind, idx) >= ver:
+                # capture the host payload reference NOW: a later
+                # flush would replace it with a newer version
+                self._ckpt_host_queue.append(
+                    (field, kind, idx,
+                     self.store.host_payload(field, kind, idx, ver),
+                     ver)
+                )
+            # else: committed-ahead-of-host implies dirty-resident
+            # (early commit handled the rest) — pinned below, in LRU
+            # order so the checkpoint-aware graph replays the same
+            # pin/release sequence on the shared policy object
+        for key, ent in self.cache.dirty_entries():
+            field, (kind, idx) = key
+            ver = self._ver.get(key, 0)
+            # the dirty resident must BE the frozen cut version, and
+            # the host must still lack it (host_current() is about the
+            # *committed* version, which may lag the parked cut)
+            assert (
+                ent.version == ver
+                and self.store.host_version_of(field, kind, idx) < ver
+            ), ("overlapped cut: dirty resident out of step", key, ver)
+            self.cache.pin(key)
+            self._ckpt_queue.append((key, ver))
+        assert (
+            len(self._ckpt_queue) + len(self._ckpt_host_queue)
+            == self._ckpt_expected_units
+        ), "overlapped cut must cover every unit exactly once"
+        ndiv = self.plan.ndiv
+        self._ckpt_chunk = -(-len(self._ckpt_queue) // ndiv)
+        self._ckpt_host_chunk = -(-len(self._ckpt_host_queue) // ndiv)
+
+    def _drain_ckpt(self, paced: bool = False) -> None:
+        """Advance the in-flight snapshot: materialize pinned payloads
+        into shards (the snapshot's flush-D2H) and write deferred
+        host-current shards. ``paced`` processes one chunk of each
+        queue (the per-block-visit cadence that spreads the snapshot
+        across the next sweep); otherwise everything drains and the
+        snapshot publishes."""
+        if self._ckpt_writer is None:
+            return
+        t0 = self._timer()
+        n_flush = self._ckpt_chunk if paced else len(self._ckpt_queue)
+        for _ in range(min(n_flush, len(self._ckpt_queue))):
+            key, ver = self._ckpt_queue.popleft()
+            ent = self.cache.pinned_entry(key)
+            assert ent is not None and ent.version == ver, (key, ver)
+            field, (kind, idx) = key
+            self._write_unit_shards(field, kind, idx, ent.value, ver)
+            wire = _payload_nbytes(ent.value)
+            raw = _payload_raw_bytes(ent.value)
+            # releasing the pin re-enforces the budget: evicted dirty
+            # victims of the pin pressure flush to host here
+            for ekey, eent in self.cache.release(key):
+                self._flush_entry(ekey, eent, -1)
+            self.cache.note_ckpt_flush(wire)
+            self.transfers.append(Transfer(
+                "d2h", field, (kind, idx), raw, wire,
+                self._ckpt_cut_sweep, -1, ckpt=True,
+            ))
+        n_host = (
+            self._ckpt_host_chunk if paced
+            else len(self._ckpt_host_queue)
+        )
+        for _ in range(min(n_host, len(self._ckpt_host_queue))):
+            field, kind, idx, value, ver = (
+                self._ckpt_host_queue.popleft()
+            )
+            self._write_unit_shards(field, kind, idx, value, ver)
+        self.ckpt_stats["drain_s"] += self._timer() - t0
+        if not self._ckpt_queue and not self._ckpt_host_queue:
+            self._finalize_ckpt()
+
+    def _write_unit_shards(
+        self, field: str, kind: str, idx: int, value, ver: int,
+    ) -> None:
+        """One unit into the in-flight snapshot: durable shard
+        write(s) + the manifest meta entry."""
+        leaves, meta = unit_shards(field, kind, idx, value, ver)
+        for lkey, arr in leaves.items():
+            self.ckpt_stats["shard_bytes"] += (
+                self._ckpt_writer.add(lkey, arr)
+            )
+        self._ckpt_units_meta[f"{field}.{kind}{idx}"] = meta
+
+    def _finalize_ckpt(self) -> None:
+        """Publish the overlapped snapshot (atomic rename + gc)."""
+        # re-verify the cut's coverage at publish time: if a shard
+        # write failed mid-drain and the driver swallowed it, refuse
+        # to publish an incomplete snapshot (the previous complete one
+        # stays live and is never gc'd by this writer)
+        assert len(self._ckpt_units_meta) == self._ckpt_expected_units, (
+            "incomplete overlapped snapshot: refusing to publish",
+            len(self._ckpt_units_meta), self._ckpt_expected_units,
+        )
+        extra = dict(self._ckpt_extra)
+        extra["store"] = {"units": self._ckpt_units_meta}
+        self._ckpt_writer.set_extra(extra)
+        self.last_checkpoint_path = self._ckpt_writer.finalize(
+            keep=self._ckpt_keep
+        )
+        self._ckpt_writer = None
+        self._ckpt_units_meta = {}
+        self.ckpt_stats["snapshots"] += 1
+        self.ckpt_stats["overlapped"] += 1
 
     # ------------------------------------------------------------------
     # crash-consistent checkpoint / restore
@@ -591,31 +953,17 @@ class AsyncExecutor:
         self.finish()
         self.flush()
         leaves, store_meta = self.store.state_dict()
-        extra = {
-            "format": CKPT_FORMAT,
-            "kind": "ooc-executor",
-            "cfg": self.cfg.to_dict(),
-            "store": store_meta,
-            "progress": {
-                "sweeps_done": self.sweeps_done,
-                "schedule": self.schedule.name,
-                # full strategy fields, so a custom Schedule object
-                # (not resolvable by name) still restores
-                "schedule_spec": {
-                    "name": self.schedule.name,
-                    "codec_sync": self.schedule.codec_sync,
-                    "window": self.schedule.window,
-                },
-                "depth": self.depth,
-                "cache_bytes": self.cache.budget_bytes,
-                "policy": self.cache.policy,
-            },
-        }
-        return ckpt.save(
+        extra = self._progress_extra()
+        extra["store"] = store_meta
+        path = ckpt.save(
             directory, self.sweeps_done, leaves,
             zstd_level=zstd_level, lossy_planes=lossy_planes,
             keep=keep, extra=extra,
         )
+        self.last_checkpoint_path = path
+        self.ckpt_stats["snapshots"] += 1
+        self.ckpt_stats["quiesced"] += 1
+        return path
 
     @classmethod
     def restore(
@@ -711,4 +1059,8 @@ class AsyncExecutor:
             "cache_bytes_used": self.cache.bytes_used,
             "cache_peak_bytes": self.cache.peak_bytes,
             "cache_dirty_bytes": self.cache.dirty_bytes,
+            "checkpoint": dict(self.ckpt_stats),
+            "ckpt_pending_units": (
+                len(self._ckpt_queue) + len(self._ckpt_host_queue)
+            ),
         }

@@ -59,7 +59,7 @@ from repro.kernels.zfp.ref import Compressed
 
 __all__ = [
     "FieldSpec", "OOCConfig", "OutOfCoreWave", "HostUnitStore",
-    "Transfer", "paper_code_fields",
+    "Transfer", "paper_code_fields", "unit_shards",
 ]
 
 Role = Literal["rw", "ro"]
@@ -147,6 +147,41 @@ def paper_code_fields(code: int, f32: bool = True) -> Dict[str, FieldSpec]:
     raise ValueError(code)
 
 
+def unit_shards(
+    field: str, kind: str, idx: int, value, version: int,
+) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
+    """Checkpoint serialization of ONE unit: ``(leaves, meta)``.
+
+    ``leaves`` is the flat shard dict (one array per raw unit, two —
+    payload + emax — per compressed unit, keyed ``field.kindidx[...]``)
+    and ``meta`` the JSON-able descriptor carrying the codec and the
+    version the payload realizes. Shared by ``HostUnitStore.
+    state_dict`` (the quiesced snapshot of the whole store) and the
+    executor's overlapped checkpoint (which persists units one at a
+    time, from pinned device payloads, while the next sweep runs).
+    ``value`` may be a host or device payload; leaves are materialized
+    to host numpy arrays here (for device values this is the D2H).
+    """
+    ukey = f"{field}.{kind}{idx}"
+    meta: Dict[str, object] = {
+        "field": field, "kind": kind, "idx": idx, "version": int(version),
+    }
+    leaves: Dict[str, np.ndarray] = {}
+    if isinstance(value, Compressed):
+        leaves[f"{ukey}.payload"] = np.asarray(value.payload)
+        leaves[f"{ukey}.emax"] = np.asarray(value.emax)
+        meta.update(
+            codec="zfp", shape=list(value.shape),
+            planes=value.planes,
+            ndim_spatial=value.ndim_spatial,
+            dtype=str(value.dtype),
+        )
+    else:
+        leaves[ukey] = np.asarray(value)
+        meta["codec"] = "raw"
+    return leaves, meta
+
+
 class HostUnitStore:
     """Host-side storage of units, raw (numpy) or compressed payloads.
 
@@ -227,6 +262,30 @@ class HostUnitStore:
             self._host_versions.get(key, 0) == self._versions.get(key, 0)
         )
 
+    def unit_keys(self) -> List[Tuple[str, str, int]]:
+        """All stored unit keys, sorted — the deterministic iteration
+        order snapshots use."""
+        return sorted(self._units)
+
+    def host_payload(self, field: str, kind: str, idx: int,
+                     min_version: int):
+        """The raw host payload object for a snapshot capture.
+
+        Unlike ``get`` (which demands full ``host_current`` — the
+        committed version), this serves a *frozen-cut* read: the
+        caller needs the payload realizing at least ``min_version``
+        (its cut version), which may be older than a later committed
+        one. Asserts the host copy is new enough, so a stale capture
+        still fails loudly. Returned objects are never mutated by the
+        store (puts replace them), so holding the reference across
+        later puts is safe.
+        """
+        assert self.host_version_of(field, kind, idx) >= min_version, (
+            "snapshot capture of a stale host payload",
+            field, kind, idx, min_version,
+        )
+        return self._units[(field, kind, idx)]
+
     def commit_device(
         self, field: str, kind: str, idx: int, version: int
     ) -> None:
@@ -261,24 +320,12 @@ class HostUnitStore:
                 "checkpoint of a stale host unit — flush residency "
                 "before snapshotting", field, kind, idx,
             )
-            ukey = f"{field}.{kind}{idx}"
-            meta: Dict[str, object] = {
-                "field": field, "kind": kind, "idx": idx,
-                "version": self._versions.get((field, kind, idx), 0),
-            }
-            if isinstance(stored, Compressed):
-                leaves[f"{ukey}.payload"] = np.asarray(stored.payload)
-                leaves[f"{ukey}.emax"] = np.asarray(stored.emax)
-                meta.update(
-                    codec="zfp", shape=list(stored.shape),
-                    planes=stored.planes,
-                    ndim_spatial=stored.ndim_spatial,
-                    dtype=str(stored.dtype),
-                )
-            else:
-                leaves[ukey] = np.asarray(stored)
-                meta["codec"] = "raw"
-            units[ukey] = meta
+            uleaves, meta = unit_shards(
+                field, kind, idx, stored,
+                self._versions.get((field, kind, idx), 0),
+            )
+            leaves.update(uleaves)
+            units[f"{field}.{kind}{idx}"] = meta
         return leaves, {"units": units}
 
     def load_state(

@@ -31,7 +31,7 @@ target: host<->HBM streaming over the v5e host link).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.taskgraph import (  # noqa: F401  (re-exported API)
     Schedule,
@@ -100,17 +100,34 @@ class Timeline:
     # transfer tasks whose completion came from the spare-stream
     # reissue (ReissuePolicy mitigation), not the original attempt
     reissued: List[str] = field(default_factory=list)
+    # per-attempt occupancy of reissued tasks: tid -> [(resource,
+    # span)] — the aborted attempt on the issuing stream (until the
+    # cancel deadline) and the retry on "spare". Tasks not present
+    # here occupied task.resource for their whole span.
+    attempts: Dict[str, List[Tuple[str, Span]]] = field(
+        default_factory=dict
+    )
 
     @property
     def makespan(self) -> float:
         return max((s.end for s in self.spans.values()), default=0.0)
 
+    def _occupancy(self, tid: str) -> List[Tuple[str, Span]]:
+        at = self.attempts.get(tid)
+        if at is not None:
+            return at
+        return [(self.tasks[tid].resource, self.spans[tid])]
+
     def busy(self) -> Dict[str, float]:
-        """Per-kind busy time (the Fig. 6 bars)."""
+        """Per-kind busy time (the Fig. 6 bars). A reissued transfer
+        contributes its actual stream occupancy — aborted attempt plus
+        retry — not its dependency span (which includes the idle wait
+        for the spare stream)."""
         out: Dict[str, float] = {}
-        for tid, span in self.spans.items():
+        for tid in self.spans:
             kind = self.tasks[tid].kind
-            out[kind] = out.get(kind, 0.0) + (span.end - span.start)
+            for _, span in self._occupancy(tid):
+                out[kind] = out.get(kind, 0.0) + (span.end - span.start)
         return out
 
     def bounding_operation(self) -> str:
@@ -118,16 +135,44 @@ class Timeline:
         return max(self.busy().items(), key=lambda kv: kv[1])[0]
 
     def busy_by_resource(self) -> Dict[str, float]:
+        """Per-stream busy time. A reissued transfer occupies its
+        issuing stream only until the cancel deadline; the retry's
+        time belongs to ``spare`` — previously the whole span (both
+        attempts AND the spare wait) was charged to the issuing
+        stream, double-counting every reissued flush."""
         out: Dict[str, float] = {}
-        for tid, span in self.spans.items():
-            res = self.tasks[tid].resource
-            out[res] = out.get(res, 0.0) + (span.end - span.start)
+        for tid in self.spans:
+            for res, span in self._occupancy(tid):
+                out[res] = out.get(res, 0.0) + (span.end - span.start)
         return out
 
     def bounding_resource(self) -> str:
         """Busiest stream — 'compute' includes codec kernels, which is
         how paper Fig. 6 decides transfer- vs compute-bound."""
         return max(self.busy_by_resource().items(), key=lambda kv: kv[1])[0]
+
+    def transfer_wire(self) -> Dict[str, float]:
+        """Modeled wire bytes by direction with the flush and
+        overlapped-snapshot shares broken out — the model-side mirror
+        of ``taskgraph.summarize_transfers`` over the live engine's
+        transfer log. Each transfer task counts **once**, reissued or
+        not: the live engine's ``CacheStats.flush_wire_bytes`` counts
+        one successful put per flush (the aborted attempt moves no
+        accountable payload), so per-attempt counting would drift from
+        the live stats by one put per injected fault."""
+        out = {
+            "h2d_wire": 0.0, "d2h_wire": 0.0,
+            "d2h_flush_wire": 0.0, "d2h_ckpt_wire": 0.0,
+        }
+        for t in self.tasks.values():
+            if t.kind not in ("h2d", "d2h"):
+                continue
+            out[f"{t.kind}_wire"] += t.amount
+            if t.flush:
+                out["d2h_flush_wire"] += t.amount
+            if t.ckpt:
+                out["d2h_ckpt_wire"] += t.amount
+        return out
 
 
 def _duration(task: Task, hw: Hardware) -> float:
@@ -165,6 +210,7 @@ def simulate(tasks: List[Task], hw: Hardware,
     spans: Dict[str, Span] = {}
     byid = {t.tid: t for t in tasks}
     reissued: List[str] = []
+    attempts: Dict[str, List[Tuple[str, Span]]] = {}
     for t in tasks:
         nominal = _duration(t, hw)
         dur = nominal
@@ -191,9 +237,18 @@ def simulate(tasks: List[Task], hw: Hardware,
             busy_until = detect
             free["spare"] = end
             reissued.append(t.tid)
+            # occupancy accounting: the issuing stream was busy only
+            # until the cancel; the retry ran on the spare stream. The
+            # dependency span below still covers both attempts (that
+            # is when dependents unblock), but busy/wire accounting
+            # must not charge the issuing stream twice.
+            attempts[t.tid] = [
+                (t.resource, Span(start, detect)),
+                ("spare", Span(rstart, end)),
+            ]
         spans[t.tid] = Span(start, end)
         free[t.resource] = busy_until
-    return Timeline(spans, byid, reissued)
+    return Timeline(spans, byid, reissued, attempts)
 
 
 def sweep_timeline(
@@ -202,6 +257,9 @@ def sweep_timeline(
     cache_bytes: int = 0,
     stats: Optional[Dict[str, object]] = None,
     policy: str = "write-back",
+    ckpt_every: int = 0,
+    ckpt_mode: str = "overlapped",
+    reissue: Optional[ReissuePolicy] = None,
 ) -> Timeline:
     """Replay ``sweeps`` sweeps of ``cfg`` under ``schedule`` on ``hw``.
 
@@ -213,10 +271,19 @@ def sweep_timeline(
     prices exactly the transfers the live engine pays in both
     directions (``stats`` receives the modeled hit/elision/flush
     counters); ``policy="write-through"`` reproduces the
-    materialize-every-writeback timeline for A/B comparison."""
+    materialize-every-writeback timeline for A/B comparison.
+
+    ``ckpt_every``/``ckpt_mode`` price periodic checkpointing
+    (``AsyncExecutor.run(..., ckpt_policy=)``): ``"overlapped"`` rides
+    the snapshot's flush-D2H on the next sweep's idle d2h stream,
+    ``"quiesced"`` drains at the boundary — comparing the two
+    makespans prices exactly the overlap the checkpoint-aware
+    schedule buys. ``reissue`` prices the spare-stream straggler
+    mitigation on all transfer tasks, snapshot flushes included."""
     return simulate(
         build_sweep_tasks(
             cfg, sweeps=sweeps, schedule=schedule,
             cache_bytes=cache_bytes, stats=stats, policy=policy,
-        ), hw
+            ckpt_every=ckpt_every, ckpt_mode=ckpt_mode,
+        ), hw, reissue=reissue,
     )

@@ -1,0 +1,130 @@
+"""Compression-induced error tracking for long out-of-core runs.
+
+The paper's second headline claim (Fig. 7, §VI-C) is that the
+fixed-rate on-the-fly compression keeps precision loss trivial out to
+4,320 time steps: each sweep decodes, computes, and re-encodes the
+pressure fields, so quantization error is *re-injected every sweep*
+and could in principle compound. This module measures that error
+curve — the lossy out-of-core engine against the exact in-core
+reference — as data, so the claim is held by a regression test
+(``tests/test_precision_loss.py``) and tracked as a bench-smoke series
+(``BENCH_smoke.json``'s ``precision`` section) instead of living only
+in a figure script.
+
+The measurement is scale-invariant in the sense that matters: error
+per compression event depends on the codec rate and the field's
+dynamic range, not the volume size, so a container-sized grid tracks
+the same dynamics as the paper's 1152^3 (``benchmarks/fig7_precision``
+holds the paper-faithful f64 rates; this module is the fast,
+assertable tier).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.outofcore import OOCConfig, OutOfCoreWave, paper_code_fields
+from repro.kernels.stencil import ref as stencil_ref
+
+
+def error_curve(
+    code: int = 4,
+    shape=(64, 24, 24),
+    ndiv: int = 2,
+    bt: int = 4,
+    sweeps: int = 8,
+    sample_every: int = 1,
+    backend: str = "ref",
+    initial: Optional[Dict[str, np.ndarray]] = None,
+) -> List[Dict[str, float]]:
+    """Error-vs-steps curve of the lossy out-of-core wave.
+
+    Runs the out-of-core engine under paper code ``code`` (2-4 are the
+    lossy ones) for ``sweeps`` sweeps of ``bt`` steps, alongside the
+    exact in-core reference, and samples the pointwise error of
+    ``p_cur`` every ``sample_every`` sweeps. Returns one row per
+    sample::
+
+        {"steps": int, "max_abs": float, "rms": float,
+         "ref_scale": float, "rel_max": float}
+
+    ``ref_scale`` is the reference field's max |value| at that point
+    (the error's natural normalizer — the wave decays, so absolute
+    thresholds alone would go stale); ``rel_max = max_abs/ref_scale``.
+    The run is deterministic (CPU JAX, fixed initial condition), so
+    the curve is exactly reproducible and assertable.
+    """
+    if initial is None:
+        p_cur0 = np.asarray(
+            stencil_ref.ricker_source(shape), dtype=np.float32
+        )
+        initial = {
+            "p_prev": 0.97 * p_cur0,
+            "p_cur": p_cur0,
+            "vel2": np.full(shape, 0.06, dtype=np.float32),
+        }
+    cfg = OOCConfig(
+        shape, ndiv, bt, paper_code_fields(code), backend=backend
+    )
+    engine = OutOfCoreWave(
+        cfg, initial["p_prev"], initial["p_cur"], initial["vel2"]
+    )
+    rp = jnp.asarray(initial["p_prev"])
+    rc = jnp.asarray(initial["p_cur"])
+    rv = jnp.asarray(initial["vel2"])
+    curve: List[Dict[str, float]] = []
+    for s in range(1, sweeps + 1):
+        engine.sweep()
+        rp, rc = stencil_ref.run_steps(rp, rc, rv, bt)
+        if s % sample_every and s != sweeps:
+            continue
+        got = engine.gather("p_cur")
+        ref = np.asarray(rc)
+        err = np.abs(got - ref)
+        scale = float(np.max(np.abs(ref)))
+        max_abs = float(np.max(err))
+        curve.append({
+            "steps": s * bt,
+            "max_abs": max_abs,
+            "rms": float(np.sqrt(np.mean(err * err))),
+            "ref_scale": scale,
+            "rel_max": max_abs / scale if scale else float("inf"),
+        })
+    return curve
+
+
+def assert_bounded_growth(
+    curve: List[Dict[str, float]],
+    rel_tol: float,
+    step_factor: float = 10.0,
+) -> None:
+    """The regression predicate over an ``error_curve``.
+
+    * every sample is finite and its max error stays under ``rel_tol``
+      relative to the reference's scale (the paper's "trivial loss"
+      claim, as an inequality);
+    * growth is *bounded*: no single inter-sample step multiplies the
+      accumulated (running-max) error by more than ``step_factor`` —
+      error may accumulate monotonically (it does: quantization is
+      re-injected every sweep) but must never blow up between samples.
+    """
+    assert curve, "empty error curve"
+    running = 0.0
+    for row in curve:
+        assert np.isfinite(row["max_abs"]), row
+        assert np.isfinite(row["rms"]), row
+        assert row["rms"] <= row["max_abs"] + 1e-30, row
+        assert row["max_abs"] <= rel_tol * row["ref_scale"], (
+            "compression error exceeded the regression bound", row,
+        )
+        if running > 0.0:
+            grown = max(running, row["max_abs"])
+            assert grown <= step_factor * running, (
+                "error exploded between samples", row, running,
+            )
+            running = grown
+        else:
+            running = row["max_abs"]

@@ -76,21 +76,26 @@ class Transfer:
     # the transfer is a spare-stream reissue of a failed/straggling
     # flush (ReissuePolicy mitigation on the snapshot path)
     reissued: bool = False
+    # overlapped-checkpoint snapshot D2H: a pinned payload materialized
+    # into a checkpoint shard (never touches the host store)
+    ckpt: bool = False
 
 
 def summarize_transfers(transfers: List[Transfer]) -> Dict[str, int]:
     """Per-direction raw/wire byte totals of a transfer log, with the
-    write-back flush share of d2h broken out. Shared by both engines so
-    their summaries stay dict-comparable."""
+    write-back flush and overlapped-snapshot shares of d2h broken out.
+    Shared by both engines so their summaries stay dict-comparable."""
     tot = {
         "h2d_raw": 0, "h2d_wire": 0, "d2h_raw": 0, "d2h_wire": 0,
-        "d2h_flush_wire": 0,
+        "d2h_flush_wire": 0, "d2h_ckpt_wire": 0,
     }
     for t in transfers:
         tot[f"{t.direction}_raw"] += t.raw_bytes
         tot[f"{t.direction}_wire"] += t.wire_bytes
         if t.flush:
             tot["d2h_flush_wire"] += t.wire_bytes
+        if t.ckpt:
+            tot["d2h_ckpt_wire"] += t.wire_bytes
     return tot
 
 
@@ -113,6 +118,9 @@ class Task:
     # d2h task that is a residency flush (dirty eviction) rather than
     # an in-order writeback
     flush: bool = False
+    # d2h task that is an overlapped-checkpoint snapshot flush (pinned
+    # payload -> checkpoint shard, overlapping the next sweep)
+    ckpt: bool = False
 
 
 @dataclass(frozen=True)
@@ -197,6 +205,8 @@ def build_sweep_tasks(
     cache_bytes: int = 0,
     stats: Optional[Dict[str, object]] = None,
     policy: str = "write-back",
+    ckpt_every: int = 0,
+    ckpt_mode: str = "overlapped",
 ) -> List[Task]:
     """Tasks for ``sweeps`` consecutive sweeps of the out-of-core engine,
     mirroring the engines' fetch/compute/writeback structure (units
@@ -228,7 +238,28 @@ def build_sweep_tasks(
     eviction regime. ``policy="write-through"`` reproduces the PR 2
     behavior (every writeback materializes). ``stats``, if given, is
     filled with the modeled residency counters and elision totals.
+
+    ``ckpt_every`` makes the schedule **checkpoint-aware**: after
+    every k-th sweep a snapshot cut is taken at the frozen unit-version
+    vector, replaying ``AsyncExecutor``'s periodic checkpointing.
+    Under ``ckpt_mode="overlapped"`` (the default — ``run(...,
+    ckpt_policy=)``'s overlapped cut) the dirty residents are pinned
+    (COW in the shared residency manager) and their snapshot flush-D2H
+    is emitted as ordinary graph transfers paced across the *next*
+    sweep's visits — ``ckpt=True`` d2h tasks with a hazard edge from
+    the codec task that produced the pinned payload, and **no** edge
+    into the next sweep's fetch/compute, so the replay prices the
+    overlap. ``ckpt_mode="quiesced"`` replays the PR 4 cut for A/B:
+    the dirty set flushes to host at the boundary (``flush=True``
+    tasks, entries marked clean) and the next sweep's first visit
+    gets barrier edges on the cut — the drain the overlapped cut
+    exists to avoid.
     """
+    if ckpt_mode not in ("overlapped", "quiesced"):
+        raise ValueError(
+            f"unknown ckpt_mode {ckpt_mode!r}; "
+            "expected 'overlapped' or 'quiesced'"
+        )
     sched = get_schedule(schedule)
     plan = cfg.plan
     z, y, x = cfg.shape
@@ -244,11 +275,12 @@ def build_sweep_tasks(
     h2d_tasks = h2d_elided = d2h_tasks = 0
 
     def add(tid, resource, kind, amount, deps, block, *, sync=False,
-            field="", unit=None, sweep=0, ver=0, flush=False):
+            field="", unit=None, sweep=0, ver=0, flush=False,
+            ckpt=False):
         tasks.append(Task(
             tid, resource, kind, amount, tuple(deps), block,
             sync=sync and sched.codec_sync, field=field, unit=unit,
-            sweep=sweep, version=ver, flush=flush,
+            sweep=sweep, version=ver, flush=flush, ckpt=ckpt,
         ))
         return tid
 
@@ -282,6 +314,47 @@ def build_sweep_tasks(
     prev_compute = None
     # last d2h tid of each block visit, for window edges
     drain_of_visit: Dict[int, str] = {}
+    # overlapped checkpoint cut: pinned payloads awaiting their
+    # snapshot flush-D2H, paced one chunk per subsequent block visit
+    # (the cadence the live executor drains its queue with)
+    pending_ckpt: List[Tuple] = []  # (key, nbytes, version, cut sweep)
+    ckpt_chunk = 0
+    ckpt_tasks_emitted = 0
+    # quiesced cut: barrier edges into the next sweep's first visit
+    barrier_dep: Tuple[str, ...] = ()
+
+    def emit_ckpt(block: int, sweep_no: int,
+                  limit: Optional[int] = None) -> None:
+        """Emit pending snapshot flush-D2H tasks (release the pins).
+        Overlapped mode: ``ckpt=True`` d2h tasks whose only dep is the
+        codec task that produced the pinned payload — nothing in the
+        next sweep depends on them, so they ride the idle d2h stream.
+        Releasing a pin re-enforces the budget, so dirty victims of
+        the pin pressure emit ordinary eviction-flush tasks here (the
+        same handback the live drain pays)."""
+        nonlocal ckpt_tasks_emitted
+        n = (
+            len(pending_ckpt) if limit is None
+            else min(limit, len(pending_ckpt))
+        )
+        for _ in range(n):
+            key, nbytes, ver, cs = pending_ckpt.pop(0)
+            ef, (ekind, eidx) = key
+            fdep = deposit_of.get(key)
+            add(
+                f"s{cs}.ckpt.{ef}.{ekind}{eidx}", "d2h", "d2h",
+                nbytes, (fdep,) if fdep else (), block,
+                field=ef, unit=(ekind, eidx), sweep=cs, ver=ver,
+                ckpt=True,
+            )
+            for ekey, eent in cache.release(key):
+                flush_task(
+                    ekey, eent, f"s{sweep_no}b{block}.rel", block,
+                    sweep_no,
+                )
+            cache.note_ckpt_flush(nbytes)
+            ckpt_tasks_emitted += 1
+
     for s in range(sweeps):
         for i in range(plan.ndiv):
             visit = s * plan.ndiv + i
@@ -291,6 +364,16 @@ def build_sweep_tasks(
                 prior = drain_of_visit.get(visit - sched.window)
                 if prior is not None:
                     window_dep = (prior,)
+            # one chunk of an in-flight overlapped snapshot drains at
+            # each visit (same cadence as AsyncExecutor._drain_ckpt)
+            if pending_ckpt:
+                emit_ckpt(i, s, ckpt_chunk)
+            if barrier_dep:
+                # quiesced cut: this sweep may not start until the
+                # boundary flush completed — the drain the overlapped
+                # cut avoids
+                window_dep = window_dep + barrier_dep
+                barrier_dep = ()
             h2d_ids, dec_ids = [], []
             fetch_flushes: List[str] = []
             for name, spec in cfg.fields.items():
@@ -400,6 +483,41 @@ def build_sweep_tasks(
                     )
                     writeback_of[key] = last_d2h
             drain_of_visit[visit] = last_d2h
+        if ckpt_every and (s + 1) % ckpt_every == 0:
+            # the checkpoint cut at this sweep boundary, at the frozen
+            # version vector (every version this sweep issued)
+            if ckpt_mode == "overlapped":
+                emit_ckpt(plan.ndiv - 1, s)  # finish a prior snapshot
+                for k, e in cache.dirty_entries():
+                    cache.pin(k)
+                    pending_ckpt.append((k, e.nbytes, e.version, s))
+                ckpt_chunk = -(-len(pending_ckpt) // plan.ndiv)
+            else:
+                # quiesced: the dirty set flushes to host AT the
+                # boundary (entries stay resident, now clean) and the
+                # next sweep's first visit barriers on the cut
+                cut_tids: List[str] = []
+                last = drain_of_visit.get(visit)
+                if last is not None:
+                    cut_tids.append(last)
+                for k, e in cache.dirty_entries():
+                    ef, (ekind, eidx) = k
+                    fdep = deposit_of.get(k)
+                    deps = (fdep,) if fdep else ()
+                    if prev_compute and prev_compute not in deps:
+                        deps = deps + (prev_compute,)
+                    tid = add(
+                        f"s{s}.ckptflush.{ef}.{ekind}{eidx}", "d2h",
+                        "d2h", e.nbytes, deps, plan.ndiv - 1,
+                        field=ef, unit=(ekind, eidx), sweep=s,
+                        ver=e.version, flush=True,
+                    )
+                    cache.mark_flushed(k)
+                    writeback_of[k] = tid
+                    cut_tids.append(tid)
+                barrier_dep = tuple(cut_tids)
+    # a final-boundary cut drains at the end
+    emit_ckpt(plan.ndiv - 1, sweeps - 1)
     if stats is not None:
         stats.update(cache.stats.as_dict())
         # elided wire bytes are exactly the manager's hit_wire_bytes /
@@ -410,6 +528,7 @@ def build_sweep_tasks(
             "h2d_elided": h2d_elided,
             "d2h_tasks": d2h_tasks,
             "flush_tasks": cache.stats.flushes,
+            "ckpt_tasks": ckpt_tasks_emitted,
             "cache_peak_bytes": cache.peak_bytes,
         })
     return tasks

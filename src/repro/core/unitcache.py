@@ -18,11 +18,22 @@ bytes only cross the link when residency is actually lost —
 * **flush-on-demand**: ``AsyncExecutor.flush()`` runs the same ordered
   drain explicitly (multi-run campaigns that want a consistent host
   view without gathering);
-* **flush-on-checkpoint** — the checkpoint cut, the fourth flush
-  point: ``AsyncExecutor.checkpoint`` quiesces the in-flight window
-  and runs the ordered flush before any byte is persisted, so a
-  snapshot can never capture a committed-on-device version the host
-  store has not realized. See ``docs/architecture.md``.
+* **flush-on-checkpoint** — the *quiesced* checkpoint cut:
+  ``AsyncExecutor.checkpoint`` quiesces the in-flight window and runs
+  the ordered flush before any byte is persisted, so a snapshot can
+  never capture a committed-on-device version the host store has not
+  realized;
+* **overlapped checkpoint cut** — the fifth flush point
+  (``AsyncExecutor.begin_checkpoint`` / ``run(..., ckpt_policy=)``):
+  instead of quiescing, the snapshot **pins** every dirty resident at
+  the frozen cut version (``pin``/``release``) and drains them to the
+  checkpoint shards while the next sweep computes. A pinned entry is
+  copy-on-write: a newer deposit of the same key moves the pre-cut
+  payload to a shadow slot instead of dropping it (the snapshot's
+  bytes survive until ``release``), and LRU eviction skips pinned
+  entries — the snapshot temporarily raises residency pressure
+  (``pinned_bytes``) rather than losing its cut.
+  See ``docs/architecture.md``.
 
 ``policy="write-through"`` reproduces PR 2 exactly (every deposit is
 clean, every writeback materializes) for A/B benchmarking; a
@@ -96,6 +107,13 @@ class CacheStats:
     # fault mitigation on the flush path (ReissuePolicy integration)
     flush_reissues: int = 0  # failed flush puts retried on the spare stream
     flush_stragglers: int = 0  # flush puts that exceeded the reissue deadline
+    # overlapped checkpoint cut (COW pin/release accounting)
+    pins: int = 0  # entries pinned at a checkpoint cut
+    pin_releases: int = 0  # pins released after their snapshot flush
+    cow_shadows: int = 0  # pinned payloads preserved across a supersede
+    pinned_bytes: int = 0  # resident bytes currently pinned (live + shadow)
+    ckpt_flushes: int = 0  # snapshot D2H materializations of pinned payloads
+    ckpt_flush_wire_bytes: int = 0  # link bytes the snapshot flushes paid
 
     @property
     def lookups(self) -> int:
@@ -120,6 +138,12 @@ class CacheStats:
             "dirty_bytes": self.dirty_bytes,
             "flush_reissues": self.flush_reissues,
             "flush_stragglers": self.flush_stragglers,
+            "pins": self.pins,
+            "pin_releases": self.pin_releases,
+            "cow_shadows": self.cow_shadows,
+            "pinned_bytes": self.pinned_bytes,
+            "ckpt_flushes": self.ckpt_flushes,
+            "ckpt_flush_wire_bytes": self.ckpt_flush_wire_bytes,
             "hit_rate": self.hit_rate,
         }
 
@@ -130,6 +154,9 @@ class Entry:
     value: Any
     nbytes: int
     dirty: bool = False
+    # pinned by an in-flight overlapped checkpoint cut: the payload
+    # must survive (shadowed, never evicted) until release()
+    pinned: bool = False
 
 
 @dataclass
@@ -174,6 +201,10 @@ class DeviceResidencyManager:
                 f"expected one of {POLICIES}"
             )
         self._entries: "OrderedDict[Hashable, Entry]" = OrderedDict()
+        # pre-cut payloads superseded while pinned (the COW copies):
+        # still resident on device (bytes accounted) but unreachable by
+        # lookups — only the snapshot's release() lets them go
+        self._shadows: Dict[Hashable, Entry] = {}
         self.bytes_used = 0
         self.peak_bytes = 0
 
@@ -206,8 +237,9 @@ class DeviceResidencyManager:
             # their bytes reclaim immediately, but a DIRTY entry is the
             # only copy of a committed-on-device payload — it stays
             # resident until superseded, evicted (flush handback) or
-            # explicitly flushed, never silently lost
-            if not ent.dirty:
+            # explicitly flushed, never silently lost. A PINNED entry
+            # is an in-flight snapshot's cut: it stays put either way.
+            if not ent.dirty and not ent.pinned:
                 self._drop(key)
             self.stats.misses += 1
             return False, None
@@ -239,14 +271,50 @@ class DeviceResidencyManager:
         returned for the caller to flush."""
         dirty = bool(dirty) and self.write_back
         if key in self._entries:
-            # superseded: the old payload can never be needed again
-            self._drop(key)
+            old = self._entries[key]
+            if old.pinned:
+                # copy-on-write: the old payload is an in-flight
+                # snapshot's cut — move it to a shadow slot (bytes stay
+                # resident, accounted as pinned) instead of dropping it
+                assert key not in self._shadows, key
+                del self._entries[key]
+                if old.dirty:
+                    # unreachable by the host path from here on: the
+                    # newer deposit carries the dirty state forward
+                    self.stats.dirty_bytes -= old.nbytes
+                    old.dirty = False
+                self._shadows[key] = old
+                self.stats.cow_shadows += 1
+            else:
+                # superseded: the old payload can never be needed again
+                self._drop(key)
         if not self.enabled or nbytes > self.budget_bytes:
             self.stats.refusals += 1
             return DepositResult(False)
+        flushes = self._evict_for(int(nbytes))
+        self._entries[key] = Entry(version, value, int(nbytes), dirty)
+        self.bytes_used += int(nbytes)
+        self.peak_bytes = max(self.peak_bytes, self.bytes_used)
+        self.stats.deposits += 1
+        if dirty:
+            self.stats.dirty_bytes += int(nbytes)
+        return DepositResult(True, flushes)
+
+    def _evict_for(self, incoming: int) -> List[Tuple[Hashable, Entry]]:
+        """LRU eviction until ``incoming`` more bytes fit the budget,
+        skipping pinned entries (a snapshot's cut may not be evicted —
+        pins raise pressure transiently instead, reclaimed at
+        release). Evicted *dirty* entries are returned for the caller
+        to flush (flush-on-evict)."""
         flushes: List[Tuple[Hashable, Entry]] = []
-        while self.bytes_used + nbytes > self.budget_bytes:
-            k, ent = self._entries.popitem(last=False)
+        while self.bytes_used + incoming > self.budget_bytes:
+            victim = next(
+                (k for k, e in self._entries.items() if not e.pinned),
+                None,
+            )
+            if victim is None:
+                break  # everything resident is pinned: over-budget
+            ent = self._entries.pop(victim)
             self.bytes_used -= ent.nbytes
             self.stats.evictions += 1
             if ent.dirty:
@@ -255,14 +323,8 @@ class DeviceResidencyManager:
                 self.stats.dirty_bytes -= ent.nbytes
                 self.stats.flushes += 1
                 self.stats.flush_wire_bytes += ent.nbytes
-                flushes.append((k, ent))
-        self._entries[key] = Entry(version, value, int(nbytes), dirty)
-        self.bytes_used += int(nbytes)
-        self.peak_bytes = max(self.peak_bytes, self.bytes_used)
-        self.stats.deposits += 1
-        if dirty:
-            self.stats.dirty_bytes += int(nbytes)
-        return DepositResult(True, flushes)
+                flushes.append((victim, ent))
+        return flushes
 
     # ------------------------------------------------------------------
     # dirty-state management (write-back)
@@ -289,6 +351,93 @@ class DeviceResidencyManager:
         copy (its D2H never touches the wire as its own transfer)."""
         self.stats.d2h_elided += 1
         self.stats.d2h_elided_wire_bytes += int(nbytes)
+
+    # ------------------------------------------------------------------
+    # overlapped checkpoint cut: COW pin / release
+    # ------------------------------------------------------------------
+    def pin(self, key: Hashable) -> Optional[Entry]:
+        """Pin ``key``'s resident entry for an in-flight snapshot.
+
+        Until ``release(key)``, the pinned payload is guaranteed to
+        survive: LRU eviction skips it, a stale lookup will not drop
+        it, and a newer deposit of the same key moves it to a shadow
+        slot (copy-on-write) instead of dropping it. Returns the
+        pinned entry, or ``None`` if the key is not resident (nothing
+        to pin). Pinning is idempotent per key; at most one snapshot
+        may be in flight (a shadowed key cannot be pinned again until
+        released).
+
+        >>> mgr = DeviceResidencyManager(budget_bytes=100)
+        >>> _ = mgr.deposit("u", 1, "v1-bytes", 40, dirty=True)
+        >>> mgr.pin("u").version
+        1
+        >>> _ = mgr.deposit("u", 2, "v2-bytes", 40, dirty=True)  # COW
+        >>> mgr.pinned_entry("u").value  # the snapshot still sees v1
+        'v1-bytes'
+        >>> mgr.release("u")  # budget re-enforced; no victims here
+        []
+        >>> mgr.stats.pinned_bytes
+        0
+        """
+        ent = self._entries.get(key)
+        if ent is None or ent.pinned:
+            return ent
+        assert key not in self._shadows, (
+            "one snapshot at a time: release the previous pin first",
+            key,
+        )
+        ent.pinned = True
+        self.stats.pins += 1
+        self.stats.pinned_bytes += ent.nbytes
+        return ent
+
+    def pinned_entry(self, key: Hashable) -> Optional[Entry]:
+        """The payload a snapshot must persist for ``key``: the shadow
+        (pre-cut payload preserved across a supersede) if one exists,
+        else the live pinned entry."""
+        shadow = self._shadows.get(key)
+        if shadow is not None:
+            return shadow
+        ent = self._entries.get(key)
+        return ent if ent is not None and ent.pinned else None
+
+    def release(self, key: Hashable) -> List[Tuple[Hashable, Entry]]:
+        """Release ``key``'s snapshot pin after its payload was
+        persisted. A shadowed (superseded) payload is dropped and its
+        bytes reclaimed; a live pinned entry loses the pin and becomes
+        evictable again. Either way the budget is re-enforced: pin
+        pressure may have over-admitted, so LRU victims evict here
+        until the budget holds again — evicted *dirty* entries are
+        returned for the caller to flush (the same flush-on-evict
+        handback as ``deposit``). No-op (empty list) if nothing is
+        pinned."""
+        freed = False
+        shadow = self._shadows.pop(key, None)
+        if shadow is not None:
+            self.bytes_used -= shadow.nbytes
+            self.stats.pinned_bytes -= shadow.nbytes
+            self.stats.pin_releases += 1
+            freed = True
+        else:
+            ent = self._entries.get(key)
+            if ent is not None and ent.pinned:
+                ent.pinned = False
+                self.stats.pinned_bytes -= ent.nbytes
+                self.stats.pin_releases += 1
+                freed = True
+        return self._evict_for(0) if freed else []
+
+    def pinned_keys(self) -> List[Hashable]:
+        """Keys currently pinned (live or shadowed), LRU-first."""
+        out = [k for k, e in self._entries.items() if e.pinned]
+        out.extend(k for k in self._shadows if k not in out)
+        return out
+
+    def note_ckpt_flush(self, nbytes: int) -> None:
+        """Account one snapshot D2H: a pinned payload materialized
+        into a checkpoint shard (distinct from host-store flushes)."""
+        self.stats.ckpt_flushes += 1
+        self.stats.ckpt_flush_wire_bytes += int(nbytes)
 
     # ------------------------------------------------------------------
     def _drop(self, key: Hashable) -> None:

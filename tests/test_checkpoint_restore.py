@@ -354,3 +354,208 @@ def test_straggling_flush_put_is_detected():
     st = live.stats()["cache"]
     assert st["flush_stragglers"] == 1
     assert st["flush_reissues"] == 0  # slow, but it did land
+
+
+# ----------------------------------------------------------------------
+# overlapped periodic checkpointing (the fifth flush point)
+# ----------------------------------------------------------------------
+
+from repro.core.executor import CheckpointPolicy  # noqa: E402
+
+
+@pytest.mark.parametrize("schedule", ["paper", "unitgrain", "depth2"])
+@pytest.mark.parametrize("budget,policy", [
+    (EVICTING, "write-back"), (ALL_FITS, "write-back"),
+    (0, "write-back"), (ALL_FITS, "write-through"),
+])
+@pytest.mark.parametrize("cut", [1, 2, 3])
+def test_overlapped_cut_restores_bit_identical_every_position(
+    tmp_path, schedule, budget, policy, cut
+):
+    """The acceptance bar: an overlapped snapshot taken at ANY sweep
+    boundary — window parked, dirty residents pinned, eviction/COW
+    pressure active — restores bit-identically to an uninterrupted
+    run, for every schedule, budget regime, policy, and cut position."""
+    ref = _executor(schedule=schedule, budget=budget, policy=policy)
+    ref.run(4 * BT)
+    expected = {n: ref.gather(n) for n in ("p_cur", "p_prev")}
+
+    live = _executor(schedule=schedule, budget=budget, policy=policy)
+    live.run(4 * BT, ckpt_policy=CheckpointPolicy(
+        str(tmp_path), every_sweeps=cut,
+    ))
+    for name in ("p_cur", "p_prev"):
+        np.testing.assert_array_equal(live.gather(name), expected[name])
+    # restore from EVERY published snapshot, not only the newest
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in tmp_path.iterdir()
+        if p.name.startswith("step_")
+    )
+    assert steps, "periodic policy must have published snapshots"
+    for step in steps:
+        resumed = AsyncExecutor.restore(
+            str(tmp_path / f"step_{step:010d}")
+        )
+        assert resumed.sweeps_done == step
+        resumed.run((4 - step) * BT)
+        for name in ("p_cur", "p_prev"):
+            np.testing.assert_array_equal(
+                resumed.gather(name), expected[name]
+            )
+
+
+def test_overlapped_cut_does_not_drain_the_window(tmp_path):
+    """What the tentpole exists for: begin_checkpoint leaves the
+    cross-sweep window parked (no quiesce) and blocks only for the
+    cut classification — no shard IO, no D2H at the boundary."""
+    live = _executor(code=2, budget=ALL_FITS)
+    live.sweep()
+    live.sweep()
+    pending_before = live.stats()["pending"]
+    assert pending_before > 0
+    live.begin_checkpoint(str(tmp_path))
+    st = live.stats()
+    assert st["pending"] == pending_before  # window untouched
+    assert st["cache"]["pins"] > 0          # cut pinned the dirty set
+    assert st["ckpt_pending_units"] > 0     # nothing persisted yet
+    assert live.last_checkpoint_path is None
+    # dirty residents are still dirty: the snapshot reads, never cleans
+    assert st["cache_dirty_bytes"] > 0
+    # the next sweep drains the queue as paced snapshot transfers
+    live.sweep()
+    live.finish()
+    assert live.stats()["ckpt_pending_units"] == 0
+    assert live.last_checkpoint_path is not None
+    assert sum(t.ckpt for t in live.transfers) > 0
+    # and the published snapshot is the BOUNDARY state, not the later one
+    resumed = AsyncExecutor.restore(str(tmp_path))
+    assert resumed.sweeps_done == 2
+
+
+def test_overlapped_cut_cow_preserves_precut_bytes(tmp_path):
+    """COW under adversarial drain order: rotate the snapshot queue so
+    the next sweep's writebacks supersede pinned entries before their
+    snapshot flush — the shadows must hand the snapshot the PRE-cut
+    payloads, and the restored run must still be bit-identical."""
+    ref = _executor(code=2, budget=ALL_FITS)
+    ref.run(4 * BT)
+    expected = ref.gather("p_cur")
+
+    live = _executor(code=2, budget=ALL_FITS)
+    live.sweep()
+    live.sweep()
+    live.begin_checkpoint(str(tmp_path))
+    live._ckpt_queue.rotate(-(len(live._ckpt_queue) // 2))
+    live.sweep()  # sweep 3 overwrites units the snapshot has not drained
+    live.finish()
+    assert live.stats()["cache"]["cow_shadows"] > 0
+    assert live.stats()["cache"]["pinned_bytes"] == 0  # all released
+    resumed = AsyncExecutor.restore(str(tmp_path))
+    assert resumed.sweeps_done == 2
+    resumed.run(2 * BT)
+    np.testing.assert_array_equal(resumed.gather("p_cur"), expected)
+
+
+def test_ckpt_policy_triggers_and_validation(tmp_path):
+    with pytest.raises(ValueError, match="every_sweeps and/or"):
+        CheckpointPolicy(str(tmp_path))
+    with pytest.raises(ValueError, match="mode"):
+        CheckpointPolicy(str(tmp_path), every_sweeps=1, mode="bogus")
+    with pytest.raises(ValueError, match=">= 1"):
+        CheckpointPolicy(str(tmp_path), every_sweeps=0)
+    pol = CheckpointPolicy(str(tmp_path), every_sweeps=2)
+    assert [pol.due(s, 0.0) for s in (1, 2, 3, 4)] == [
+        False, True, False, True,
+    ]
+    wall = CheckpointPolicy(str(tmp_path), wall_budget_s=10.0)
+    assert not wall.due(1, 9.9) and wall.due(1, 10.0)
+
+
+def test_wall_budget_policy_snapshots_on_elapsed_time(tmp_path):
+    """The wall-clock trigger: an exhausted budget snapshots at every
+    boundary, an unreachable one never does."""
+    live = _executor(code=1, budget=ALL_FITS)
+    live.run(4 * BT, ckpt_policy=CheckpointPolicy(
+        str(tmp_path), wall_budget_s=0.0,
+    ))
+    assert live.stats()["checkpoint"]["overlapped"] == 4
+    never = _executor(code=1, budget=ALL_FITS)
+    never.run(4 * BT, ckpt_policy=CheckpointPolicy(
+        str(tmp_path / "never"), wall_budget_s=1e9,
+    ))
+    assert never.stats()["checkpoint"]["snapshots"] == 0
+    assert not (tmp_path / "never").exists()
+
+
+def test_quiesced_policy_mode_reuses_pr4_cut(tmp_path):
+    """mode="quiesced" A/B path: every due boundary runs the full
+    drain+flush+persist; no pins, no snapshot transfers."""
+    ref = _executor(code=2, budget=ALL_FITS)
+    ref.run(4 * BT)
+    expected = ref.gather("p_cur")
+    live = _executor(code=2, budget=ALL_FITS)
+    live.run(4 * BT, ckpt_policy=CheckpointPolicy(
+        str(tmp_path), every_sweeps=2, mode="quiesced",
+    ))
+    st = live.stats()
+    assert st["checkpoint"]["quiesced"] == 2
+    assert st["cache"]["pins"] == 0
+    assert sum(t.ckpt for t in live.transfers) == 0
+    np.testing.assert_array_equal(live.gather("p_cur"), expected)
+    resumed = AsyncExecutor.restore(str(tmp_path))
+    resumed.run((4 - resumed.sweeps_done) * BT)
+    np.testing.assert_array_equal(resumed.gather("p_cur"), expected)
+
+
+def test_overlapped_and_quiesced_snapshots_restore_identically(tmp_path):
+    """The two cuts at the same boundary publish interchangeable
+    snapshots: restore from either and the resumed bytes agree."""
+    a = _executor(code=2, budget=ALL_FITS)
+    a.sweep(); a.sweep()
+    a.begin_checkpoint(str(tmp_path / "ov"))
+    a.sweep(); a.finish()  # snapshot publishes while sweep 3 runs
+
+    b = _executor(code=2, budget=ALL_FITS)
+    b.sweep(); b.sweep()
+    b.checkpoint(str(tmp_path / "qu"))
+
+    ra = AsyncExecutor.restore(str(tmp_path / "ov"))
+    rb = AsyncExecutor.restore(str(tmp_path / "qu"))
+    assert ra.sweeps_done == rb.sweeps_done == 2
+    ra.run(2 * BT)
+    rb.run(2 * BT)
+    np.testing.assert_array_equal(ra.gather("p_cur"), rb.gather("p_cur"))
+
+
+def test_overlapped_snapshot_is_crash_consistent(tmp_path):
+    """A process that dies mid-drain leaves only tmp.* — latest() and
+    restore keep serving the previous complete snapshot."""
+    live = _executor(code=2, budget=ALL_FITS)
+    live.sweep()
+    good = live.checkpoint(str(tmp_path))  # boundary-1 snapshot
+    live.sweep()
+    live.begin_checkpoint(str(tmp_path))
+    live._drain_ckpt(paced=True)  # a few shards land, then "crash"
+    assert live._ckpt_writer is not None  # still unpublished
+    assert ckpt.latest(str(tmp_path)) == good
+    resumed = AsyncExecutor.restore(str(tmp_path))
+    assert resumed.sweeps_done == 1
+
+
+def test_gather_mid_snapshot_forces_completion(tmp_path):
+    """Any quiesce path (finish/flush/gather/checkpoint) force-completes
+    an in-flight snapshot first, so pins can never leak."""
+    ref = _executor(code=2, budget=ALL_FITS)
+    ref.run(2 * BT)
+    expected = ref.gather("p_cur")
+    live = _executor(code=2, budget=ALL_FITS)
+    live.sweep(); live.sweep()
+    live.begin_checkpoint(str(tmp_path))
+    out = live.gather("p_cur")  # no sweep in between
+    np.testing.assert_array_equal(out, expected)
+    st = live.stats()
+    assert st["ckpt_pending_units"] == 0
+    assert st["cache"]["pinned_bytes"] == 0
+    assert live.last_checkpoint_path is not None
+    resumed = AsyncExecutor.restore(str(tmp_path))
+    assert resumed.sweeps_done == 2

@@ -251,3 +251,230 @@ def test_deps_respected():
     for t in tasks:
         for d in t.deps:
             assert tl.spans[d].end <= tl.spans[t.tid].start + 1e-12
+
+
+# ----------------------------------------------------------------------
+# checkpoint-aware schedule: overlapped vs quiesced snapshot pricing
+# ----------------------------------------------------------------------
+
+CACHED = 64 * 2**30  # working set fully resident
+
+
+def test_overlapped_ckpt_tasks_do_not_gate_the_next_sweep():
+    """The point of the checkpoint-aware schedule: snapshot flush-D2H
+    tasks exist (ckpt=True, on the d2h stream, hazard edge back to the
+    codec task that produced the pinned payload) but NOTHING in the
+    next sweep depends on them."""
+    cfg = _cfg(2)
+    stats = {}
+    tasks = build_sweep_tasks(
+        cfg, sweeps=4, schedule="depth2", cache_bytes=CACHED,
+        stats=stats, ckpt_every=2, ckpt_mode="overlapped",
+    )
+    byid = {t.tid: t for t in tasks}
+    ck = [t for t in tasks if t.ckpt]
+    assert ck and stats["ckpt_tasks"] == len(ck)
+    assert stats["pins"] == stats["pin_releases"] == len(ck)
+    for t in ck:
+        assert t.kind == "d2h" and t.resource == "d2h"
+        assert ".ckpt." in t.tid
+        # hazard edge: the pinned payload's producer precedes its flush
+        for d in t.deps:
+            assert byid[d].resource == "compute"
+    ck_tids = {t.tid for t in ck}
+    for t in tasks:
+        if not t.ckpt:
+            assert not (ck_tids & set(t.deps)), t.tid
+
+
+def test_quiesced_ckpt_mode_barriers_the_next_sweep():
+    cfg = _cfg(2)
+    stats = {}
+    tasks = build_sweep_tasks(
+        cfg, sweeps=4, schedule="depth2", cache_bytes=CACHED,
+        stats=stats, ckpt_every=2, ckpt_mode="quiesced",
+    )
+    flushes = [t for t in tasks if t.flush and ".ckptflush." in t.tid]
+    assert flushes and stats["ckpt_tasks"] == 0
+    assert stats["flushes"] == len(flushes)
+    # the cut's flushes gate sweep 2's first fetches (the barrier)
+    gated = [
+        t for t in tasks if t.sweep == 2 and t.kind in ("h2d", "stencil")
+        and any(".ckptflush." in d for d in t.deps)
+    ]
+    assert gated, "quiesced cut must barrier the next sweep"
+    with pytest.raises(ValueError, match="ckpt_mode"):
+        build_sweep_tasks(cfg, sweeps=2, ckpt_every=1, ckpt_mode="nope")
+
+
+def test_overlapped_snapshot_beats_quiesced_makespan():
+    """The paper-motivated invariant (also held by bench-smoke): with
+    the working set resident, hiding the snapshot flush behind the next
+    sweep's compute beats draining at the boundary — and costs almost
+    nothing over not snapshotting at all."""
+    cfg = _cfg(2)
+    base = sweep_timeline(
+        cfg, V100_PCIE, sweeps=4, schedule="depth2", cache_bytes=CACHED
+    ).makespan
+    ov = sweep_timeline(
+        cfg, V100_PCIE, sweeps=4, schedule="depth2", cache_bytes=CACHED,
+        ckpt_every=2, ckpt_mode="overlapped",
+    )
+    qu = sweep_timeline(
+        cfg, V100_PCIE, sweeps=4, schedule="depth2", cache_bytes=CACHED,
+        ckpt_every=2, ckpt_mode="quiesced",
+    )
+    assert base <= ov.makespan < qu.makespan
+    # both cuts move the same snapshot bytes; only the schedule differs
+    assert ov.transfer_wire()["d2h_ckpt_wire"] == pytest.approx(
+        qu.transfer_wire()["d2h_flush_wire"]
+    )
+    # overlap hides (nearly) all of it: the overhead over no-ckpt is
+    # under a tenth of the quiesced overhead
+    assert (ov.makespan - base) < 0.1 * (qu.makespan - base)
+
+
+def test_ckpt_graph_deps_respected_both_modes():
+    for mode in ("overlapped", "quiesced"):
+        tasks = build_sweep_tasks(
+            _cfg(2), sweeps=4, schedule="depth2", cache_bytes=CACHED,
+            ckpt_every=1, ckpt_mode=mode,
+        )
+        tl = simulate(tasks, V100_PCIE)
+        for t in tasks:
+            for d in t.deps:
+                assert tl.spans[d].end <= tl.spans[t.tid].start + 1e-12
+
+
+def test_model_live_agree_on_ckpt_transfers():
+    """The checkpoint-aware graph emits exactly the snapshot transfers
+    the live overlapped run pays (field, unit, wire bytes — compared as
+    a multiset), and the shared residency policy replays the identical
+    pin/release/shadow/eviction sequence, at a full-residency AND an
+    evicting budget."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.core.executor import AsyncExecutor, CheckpointPolicy
+    from repro.kernels.stencil import ref as stencil_ref
+
+    shape, bt = (96, 12, 12), 2
+    p_cur = np.asarray(stencil_ref.ricker_source(shape), np.float32)
+    p_prev, vel2 = 0.95 * p_cur, np.full(shape, 0.07, np.float32)
+    for budget in (100_000, 1 << 30):
+        cfg = OOCConfig(shape, 4, bt, paper_code_fields(2))
+        with tempfile.TemporaryDirectory() as td:
+            live = AsyncExecutor(
+                cfg, p_prev, p_cur, vel2, cache_bytes=budget
+            )
+            live.run(4 * bt, ckpt_policy=CheckpointPolicy(
+                td, every_sweeps=2,
+            ))
+        stats = {}
+        tasks = build_sweep_tasks(
+            cfg, sweeps=4, schedule="depth2", cache_bytes=budget,
+            stats=stats, ckpt_every=2,
+        )
+        model = sorted(
+            (t.field, t.unit, int(t.amount)) for t in tasks if t.ckpt
+        )
+        issued = sorted(
+            (t.field, t.unit, t.wire_bytes)
+            for t in live.transfers if t.ckpt
+        )
+        assert issued == model
+        lc = live.stats()["cache"]
+        for k in ("pins", "pin_releases", "cow_shadows", "ckpt_flushes",
+                  "ckpt_flush_wire_bytes", "evictions", "hits"):
+            assert lc[k] == stats[k], (budget, k)
+
+
+# ----------------------------------------------------------------------
+# reissue accounting: a reissued flush transfer counts ONCE
+# ----------------------------------------------------------------------
+
+
+def test_reissued_flush_not_double_counted():
+    """Regression (model vs live drift): the reissued flush used to be
+    charged to the issuing d2h stream for its WHOLE span — aborted
+    attempt, spare-stream wait, and retry — i.e. roughly one extra put
+    per injected fault. The issuing stream is only busy until the
+    cancel deadline; the retry's time belongs to 'spare'; and the wire
+    accounting counts the flush payload once either way."""
+    from repro.distributed.fault import ReissuePolicy
+
+    tasks, _ = _evicting_tasks()
+    flush_tid = next(t.tid for t in tasks if t.flush)
+    pol = ReissuePolicy(factor=3.0)
+    base = simulate(tasks, V100_PCIE)
+    fixed = simulate(
+        tasks, V100_PCIE, straggler={flush_tid: 50.0}, reissue=pol
+    )
+    assert fixed.reissued == [flush_tid]
+    nominal = base.spans[flush_tid].end - base.spans[flush_tid].start
+    # d2h stream: every other task unchanged, the straggler charged
+    # only up to the cancel deadline (not the full two-attempt span)
+    extra = fixed.busy_by_resource()["d2h"] - base.busy_by_resource()["d2h"]
+    assert extra == pytest.approx(pol.deadline(nominal) - nominal)
+    # the retry shows up on the spare stream, at nominal duration
+    assert fixed.busy_by_resource()["spare"] == pytest.approx(nominal)
+    # byte accounting: identical with and without the injected fault —
+    # one flush payload, not one per attempt
+    assert fixed.transfer_wire() == base.transfer_wire()
+    assert fixed.transfer_wire()["d2h_flush_wire"] > 0
+
+
+def test_model_flush_wire_matches_live_stats_under_injected_fault():
+    """The model/live contract the drift broke: after one injected
+    flush fault (put fails once, ReissuePolicy retries on the spare
+    stream), the live CacheStats.flush_wire_bytes and the transfer log
+    agree with each other and move exactly the dirty working set —
+    once."""
+    import numpy as np
+
+    from repro.core.executor import AsyncExecutor
+    from repro.core.outofcore import OOCConfig as _OOC
+    from repro.core.taskgraph import summarize_transfers
+    from repro.distributed.fault import ReissuePolicy
+    from repro.kernels.stencil import ref as stencil_ref
+
+    shape, bt = (96, 12, 12), 2
+    p_cur = np.asarray(stencil_ref.ricker_source(shape), np.float32)
+    p_prev, vel2 = 0.95 * p_cur, np.full(shape, 0.07, np.float32)
+    cfg = _OOC(shape, 4, bt, paper_code_fields(2))
+
+    def run_flush(inject):
+        live = AsyncExecutor(
+            cfg, p_prev, p_cur, vel2, cache_bytes=1 << 30,
+            reissue=ReissuePolicy(factor=3.0),
+        )
+        live.run(2 * bt)
+        expected_wire = sum(
+            e.nbytes for _, e in live.cache.dirty_entries()
+        )
+        if inject:
+            orig = live.store.put
+            state = {"left": 1}
+
+            def flaky(field, kind, idx, value, version=None):
+                if state["left"] > 0:
+                    state["left"] -= 1
+                    raise RuntimeError("injected")
+                return orig(field, kind, idx, value, version=version)
+
+            live.store.put = flaky
+        live.flush()
+        return live, expected_wire
+
+    clean, wire_clean = run_flush(inject=False)
+    faulty, wire_faulty = run_flush(inject=True)
+    assert wire_clean == wire_faulty > 0
+    for eng, expected in ((clean, wire_clean), (faulty, wire_faulty)):
+        st = eng.stats()["cache"]
+        assert st["flush_wire_bytes"] == expected
+        assert (
+            summarize_transfers(eng.transfers)["d2h_flush_wire"]
+            == expected
+        )
+    assert faulty.stats()["cache"]["flush_reissues"] == 1

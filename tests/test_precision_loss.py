@@ -1,0 +1,98 @@
+"""Precision-loss regression tier (paper Fig. 7 / §VI-C as a test).
+
+The paper claims compression-induced error stays trivial out to 4,320
+time steps even though quantization is re-injected at every sweep's
+re-encode. These tests hold that claim as a regression bound over the
+measured error curve of the lossy out-of-core engine vs the exact
+in-core reference (``repro.core.precision.error_curve`` — the same
+helper ``benchmarks/run.py --smoke`` uses to record the curve into
+``BENCH_smoke.json``):
+
+* every sample's max-abs error stays under a calibrated fraction of
+  the reference field's scale;
+* growth is *monotone-bounded*: the accumulated (running-max) error
+  never multiplies by more than an order of magnitude between samples
+  — accumulation is expected, explosion is a regression;
+* the lossless configuration (code 1) is exactly exact.
+
+Fast N runs in tier-1; the long-N run (240 steps on the test grid —
+the same re-encode count per unit as a paper-scale multi-thousand-step
+run at production bt) is behind ``-m slow``. Tolerances are calibrated
+against the deterministic CPU curves with ~2x headroom; a codec or
+engine change that degrades precision trips them.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.precision import assert_bounded_growth, error_curve
+
+# calibrated ceilings on max|err| / max|ref| (deterministic curves:
+# measured fast peaks are 0.005 / 0.05, long-run plateaus 0.012 / 0.19)
+REL_TOL_FAST = {2: 0.010, 4: 0.100}
+REL_TOL_SLOW = {2: 0.030, 4: 0.350}
+
+
+@pytest.mark.parametrize("code", [2, 4])
+def test_fast_error_curve_is_bounded(code):
+    curve = error_curve(code=code, sweeps=8)
+    assert [r["steps"] for r in curve] == [4, 8, 12, 16, 20, 24, 28, 32]
+    assert_bounded_growth(curve, REL_TOL_FAST[code])
+    # the error is real (lossy codec actually engaged), not zero
+    assert curve[0]["max_abs"] > 0
+
+
+def test_lossy_rate_orders_the_curves():
+    """More aggressive rate -> more error, at every sample: the 2.67:1
+    code-4 curve dominates the 2:1 code-2 curve pointwise."""
+    c2 = error_curve(code=2, sweeps=6)
+    c4 = error_curve(code=4, sweeps=6)
+    for a, b in zip(c2, c4):
+        assert a["steps"] == b["steps"]
+        assert a["max_abs"] < b["max_abs"]
+        assert a["rms"] < b["rms"]
+
+
+def test_uncompressed_code_is_exact():
+    """Code 1 (no compression) pays zero error — the curve mechanism
+    itself injects nothing."""
+    curve = error_curve(code=1, sweeps=4)
+    for row in curve:
+        assert row["max_abs"] == 0.0
+        assert row["rms"] == 0.0
+
+
+def test_bounded_growth_predicate_rejects_explosions():
+    good = [
+        {"steps": 4, "max_abs": 1e-4, "rms": 1e-5, "ref_scale": 1.0,
+         "rel_max": 1e-4},
+        {"steps": 8, "max_abs": 2e-4, "rms": 2e-5, "ref_scale": 1.0,
+         "rel_max": 2e-4},
+    ]
+    assert_bounded_growth(good, rel_tol=1e-3)
+    over = [dict(good[0], max_abs=0.5, rel_max=0.5)]
+    with pytest.raises(AssertionError, match="regression bound"):
+        assert_bounded_growth(over, rel_tol=1e-3)
+    exploding = [good[0], dict(good[1], max_abs=0.9, rel_max=0.9)]
+    with pytest.raises(AssertionError, match="exploded"):
+        assert_bounded_growth(exploding, rel_tol=1.0)
+    with pytest.raises(AssertionError, match="empty"):
+        assert_bounded_growth([], rel_tol=1.0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("code", [2, 4])
+def test_long_run_error_saturates(code):
+    """The paper's 4,320-step claim, scaled to the test grid: over a
+    long run the error curve saturates (bounded by the field's dynamic
+    range interacting with the fixed rate) instead of compounding —
+    the late-curve running max sits within an order of magnitude of
+    the early one, far from exponential growth."""
+    curve = error_curve(code=code, sweeps=60, sample_every=5)
+    assert_bounded_growth(curve, REL_TOL_SLOW[code])
+    early = max(r["max_abs"] for r in curve[:3])
+    late = max(r["max_abs"] for r in curve)
+    assert late <= 12 * early
+    # and the tail is flat-ish: the last three samples agree within 3x
+    tail = [r["max_abs"] for r in curve[-3:]]
+    assert max(tail) <= 3 * min(tail)

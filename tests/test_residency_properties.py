@@ -44,11 +44,17 @@ _op = st.one_of(
     st.tuples(st.just("lookup"), st.sampled_from(KEYS),
               st.integers(0, 4)),
     st.tuples(st.just("flush_all")),
+    # overlapped checkpoint cut: COW pin / release
+    st.tuples(st.just("pin"), st.sampled_from(KEYS)),
+    st.tuples(st.just("release"), st.sampled_from(KEYS)),
 )
 
 
 def _apply(mgr, ops):
-    """Run ops; return the flush log (evict + explicit) and hit log."""
+    """Run ops; return the flush log (evict + explicit + release
+    handback) and hit log. ``pin`` respects the one-snapshot contract:
+    a key with an outstanding shadow is not re-pinned (the executor
+    drains a snapshot fully before the next cut)."""
     flushed, hits = [], []
     for op in ops:
         if op[0] == "deposit":
@@ -61,6 +67,12 @@ def _apply(mgr, ops):
             _, key, ver = op
             hit, val = mgr.lookup(key, ver)
             hits.append((key, ver, hit, val))
+        elif op[0] == "pin":
+            if op[1] not in mgr._shadows:
+                mgr.pin(op[1])
+        elif op[0] == "release":
+            for k, e in mgr.release(op[1]):
+                flushed.append((k, e.version, e.nbytes))
         else:  # flush_all — the gather/checkpoint path
             for k, e in mgr.dirty_entries():
                 mgr.mark_flushed(k)
@@ -78,7 +90,17 @@ def test_accounting_invariants(budget, policy, ops):
     peak = 0
     for i, op in enumerate(ops):
         _apply(mgr, [op])
-        assert 0 <= mgr.bytes_used <= max(budget, 0)
+        # pins may transiently over-admit (a snapshot's cut cannot be
+        # evicted), but the UNPINNED portion always obeys the budget
+        # and the overhang is exactly the pinned bytes
+        assert 0 <= mgr.bytes_used
+        assert (
+            mgr.bytes_used - mgr.stats.pinned_bytes <= max(budget, 0)
+        )
+        assert mgr.stats.pinned_bytes == (
+            sum(e.nbytes for e in mgr._entries.values() if e.pinned)
+            + sum(e.nbytes for e in mgr._shadows.values())
+        )
         assert 0 <= mgr.dirty_bytes <= mgr.bytes_used
         peak = max(peak, mgr.bytes_used)
         assert mgr.peak_bytes == peak
@@ -88,6 +110,7 @@ def test_accounting_invariants(budget, policy, ops):
         assert mgr.dirty_bytes == resident_dirty
         if policy == "write-through":
             assert mgr.dirty_bytes == 0
+    assert mgr.stats.pins >= mgr.stats.pin_releases
     s = mgr.stats
     assert s.lookups == s.hits + s.misses
     assert s.deposits + s.refusals == sum(
@@ -114,10 +137,12 @@ def test_policy_is_deterministic(budget, policy, ops):
     assert ha == hb
     assert a.stats == b.stats
     assert list(a._entries.keys()) == list(b._entries.keys())
-    assert [(e.version, e.nbytes, e.dirty)
+    assert [(e.version, e.nbytes, e.dirty, e.pinned)
             for e in a._entries.values()] == [
-        (e.version, e.nbytes, e.dirty) for e in b._entries.values()
+        (e.version, e.nbytes, e.dirty, e.pinned)
+        for e in b._entries.values()
     ]
+    assert sorted(a._shadows) == sorted(b._shadows)
 
 
 @given(ops=st.lists(_op, max_size=80))
@@ -140,3 +165,117 @@ def test_dirty_payloads_flushed_exactly_once(ops):
     )
     for kv, n in Counter((k, v) for k, v, _ in flushed).items():
         assert n <= max(deposits.get(kv, 0), 1), (kv, n)
+
+
+@given(ops=st.lists(_op, max_size=60))
+def test_cow_pin_accounting_and_shadow_lifecycle(ops):
+    """COW invariants under arbitrary op interleavings: a pinned
+    payload is always reachable via pinned_entry() until released
+    (supersede moves it to a shadow, never drops it), shadows are
+    never dirty, never hit by lookups, and release reclaims their
+    bytes exactly once."""
+    mgr = DeviceResidencyManager(100)
+    pinned_payload = {}
+    for op in ops:
+        if op[0] == "pin" and op[1] not in mgr._shadows:
+            ent = mgr.pin(op[1])
+            if ent is not None:
+                pinned_payload[op[1]] = ent.value
+        elif op[0] == "release":
+            for _ in mgr.release(op[1]):
+                pass
+            pinned_payload.pop(op[1], None)
+        else:
+            _apply(mgr, [op])
+        for key, payload in pinned_payload.items():
+            ent = mgr.pinned_entry(key)
+            assert ent is not None, key
+            assert ent.value == payload, key  # the PRE-cut bytes
+        for key, e in mgr._shadows.items():
+            assert not e.dirty
+            assert key in pinned_payload
+    for key in list(pinned_payload):
+        for _ in mgr.release(key):
+            pass
+    assert mgr.stats.pinned_bytes == 0
+    assert not mgr._shadows
+    assert mgr.bytes_used <= mgr.budget_bytes
+
+
+# ----------------------------------------------------------------------
+# checkpoint cuts: a snapshot at ANY sweep boundary restores
+# bit-identically, under eviction and COW pressure
+# ----------------------------------------------------------------------
+
+SHAPE = (48, 10, 10)
+BT = 2
+TOTAL_SWEEPS = 4
+
+
+def _mini_executor(budget):
+    import numpy as np
+
+    from repro.core.executor import AsyncExecutor
+    from repro.core.outofcore import OOCConfig, paper_code_fields
+    from repro.kernels.stencil import ref as stencil_ref
+
+    p_cur = np.asarray(stencil_ref.ricker_source(SHAPE), np.float32)
+    p_prev, vel2 = 0.95 * p_cur, np.full(SHAPE, 0.07, np.float32)
+    cfg = OOCConfig(SHAPE, 2, BT, paper_code_fields(2))
+    return AsyncExecutor(
+        cfg, p_prev, p_cur, vel2, schedule="depth2", cache_bytes=budget
+    )
+
+
+@hypothesis.settings(
+    max_examples=12, deadline=None, derandomize=True,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+@given(
+    cut=st.integers(1, TOTAL_SWEEPS - 1),
+    budget=st.sampled_from([0, 25_000, 1 << 30]),
+    rotate=st.integers(0, 4),
+)
+def test_snapshot_at_any_boundary_restores_bit_identical(
+    cut, budget, rotate
+):
+    """The satellite property: an overlapped snapshot at a randomly
+    chosen sweep boundary — queue drain order perturbed to force COW
+    shadows, budget regimes from cache-off to forced-eviction —
+    restores bit-identically, releases every pin (flush-exactly-once:
+    one snapshot D2H per pinned unit), and leaves no pinned bytes."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.core.executor import AsyncExecutor
+
+    ref = _mini_executor(budget)
+    ref.run(TOTAL_SWEEPS * BT)
+    expected = ref.gather("p_cur")
+
+    live = _mini_executor(budget)
+    for _ in range(cut):
+        live.sweep()
+    with tempfile.TemporaryDirectory() as td:
+        live.begin_checkpoint(td)
+        pinned = len(live._ckpt_queue)
+        if rotate and pinned:
+            live._ckpt_queue.rotate(-(rotate % pinned))
+        live.run((TOTAL_SWEEPS - cut) * BT)
+        st_ = live.stats()
+        cache = st_["cache"]
+        assert st_["ckpt_pending_units"] == 0
+        assert cache["pinned_bytes"] == 0
+        assert cache["pins"] == cache["pin_releases"] == pinned
+        # flush-exactly-once: one snapshot D2H per pinned unit
+        assert cache["ckpt_flushes"] == pinned
+        assert sum(t.ckpt for t in live.transfers) == pinned
+        np.testing.assert_array_equal(live.gather("p_cur"), expected)
+
+        resumed = AsyncExecutor.restore(td)
+        assert resumed.sweeps_done == cut
+        resumed.run((TOTAL_SWEEPS - cut) * BT)
+        np.testing.assert_array_equal(
+            resumed.gather("p_cur"), expected
+        )
