@@ -38,9 +38,10 @@ LIVE_SHAPE = (96, 32, 32)
 CACHED_BUDGET = 64 * 2**30
 
 
-def _cfg(code):
+def _cfg(code, ndiv=8, bt=12):
     return OOCConfig(
-        SHAPE, 8, 12, paper_code_fields(code, f32=False), dtype="float64"
+        SHAPE, ndiv, bt, paper_code_fields(code, f32=False),
+        dtype="float64",
     )
 
 
@@ -108,13 +109,15 @@ def run(
     cache_bytes: int = 0,
     policy: str = "write-back",
     sweeps: int = 1,
+    ndiv: int = 8,
+    bt: int = 12,
 ) -> None:
     _run_live()
     default_args = schedule == "paper" and not cache_bytes
     tag = "" if default_args else f"/{schedule}/{policy}"
     for code in (1, 2, 3, 4):
         _model_row(
-            f"fig6{tag}/code{code}", _cfg(code), schedule,
+            f"fig6{tag}/code{code}", _cfg(code, ndiv, bt), schedule,
             cache_bytes, policy, sweeps=sweeps,
         )
     cells = SHAPE[0] * SHAPE[1] * SHAPE[2] * 12
@@ -134,7 +137,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument(
         "--schedule", default="paper",
-        help="issue schedule: paper | unitgrain | overlap | depth-k",
+        help="issue schedule: paper | unitgrain | overlap | depth-k | "
+        "temporal-k (k sweeps fused per visit; h2d/d2h bars shrink "
+        "~k-fold per simulated step)",
     )
     ap.add_argument(
         "--cache-bytes", type=int, default=0,
@@ -147,13 +152,24 @@ def main(argv=None) -> None:
     )
     ap.add_argument(
         "--sweeps", type=int, default=1,
-        help="modeled sweeps (steady-state rows need >= 2)",
+        help="modeled sweeps (steady-state rows need >= 2; temporal-k "
+        "needs >= k to show the fused round)",
+    )
+    ap.add_argument(
+        "--ndiv", type=int, default=8,
+        help="Z blocks (temporal-k needs block > 2*radius*bt*k: "
+        "e.g. --ndiv 4 --bt 6 fits temporal-4 at paper scale)",
+    )
+    ap.add_argument(
+        "--bt", type=int, default=12,
+        help="in-block temporal steps per sweep",
     )
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     run(
         schedule=args.schedule, cache_bytes=args.cache_bytes,
-        policy=args.policy, sweeps=args.sweeps,
+        policy=args.policy, sweeps=args.sweeps, ndiv=args.ndiv,
+        bt=args.bt,
     )
 
 

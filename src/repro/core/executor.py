@@ -264,14 +264,17 @@ class AsyncExecutor:
             stragglers. ``None`` keeps the fail-fast behavior.
         """
         self.cfg = cfg
-        self.plan = cfg.plan
-        self.plan.check_cover()
         self.schedule = get_schedule(schedule)
+        # temporal-k: every visit fuses k sweeps against the halo-k
+        # widened plan (validated by OOCConfig with a clear error)
+        self.temporal = self.schedule.temporal
+        self.plan = cfg.temporal_plan(self.temporal)
+        self.plan.check_cover()
         # window=None schedules (paper/unitgrain) still run double-
         # buffered live; the bound is an executor property the
         # depth-k schedules merely make explicit in the graph.
         self.depth = self.schedule.window or 2
-        self.store = HostUnitStore(cfg)
+        self.store = HostUnitStore(cfg, plan=self.plan)
         seeds = (p_prev, p_cur, vel2)
         if any(s is not None for s in seeds):
             assert all(s is not None for s in seeds), (
@@ -453,9 +456,12 @@ class AsyncExecutor:
         i: int,
         shared: Dict[str, Optional[jax.Array]],
         held: Dict[str, jax.Array],
+        kr: int,
     ) -> Dict[str, Optional[jax.Array]]:
-        """Assemble, run bt stencil steps, slice out writeback units.
-        Returns the carry (time-t common regions) for block i+1."""
+        """Assemble, run ``bt * kr`` fused stencil steps, slice out
+        writeback units. Returns the carry (time-t common regions) for
+        block i+1. ``kr`` is the number of sweeps this visit fuses
+        (== schedule temporal, except a truncated final round)."""
         cfg, plan = self.cfg, self.plan
         h, b = plan.halo, plan.block
         dev: Dict[str, jax.Array] = {}
@@ -465,9 +471,9 @@ class AsyncExecutor:
             if i < plan.ndiv - 1:
                 new_shared[name] = arr[b : b + 2 * h]
             dev[name] = arr
-        pp, pc = stencil_ops.temporal_steps(
+        pp, pc = stencil_ops.fused_temporal_steps(
             dev["p_prev"], dev["p_cur"], dev["vel2"],
-            steps=cfg.bt, backend=cfg.backend,
+            steps=cfg.bt * kr, backend=cfg.backend,
         )
         s, _ = plan.owned(i)
         itemsize = jnp.dtype(cfg.dtype).itemsize
@@ -524,8 +530,9 @@ class AsyncExecutor:
             wire, self.sweeps_done, block, flush=True, reissued=reissued,
         ))
 
-    def _park_writebacks(self, btasks: List[Task]) -> None:
-        """Bump unit versions, deposit the on-device payloads into
+    def _park_writebacks(self, btasks: List[Task], kr: int = 1) -> None:
+        """Bump unit versions (by ``kr`` — one fused visit advances a
+        unit ``kr`` sweeps), deposit the on-device payloads into
         residency (dirty under write-back, so the d2h can commit
         without a host copy; the next sweep can hit either way), and
         park the d2h tasks in the window. Dirty LRU victims of the
@@ -535,12 +542,12 @@ class AsyncExecutor:
             key = (t.field, t.unit)
             val = self._outvals.pop(key)
             raw = self._outraw.pop(key)
-            ver = self._ver.get(key, 0) + 1
+            ver = self._ver.get(key, 0) + kr
             self._ver[key] = ver
             if self.cache.enabled:
                 nbytes = _payload_nbytes(val)
                 res = self.cache.deposit(key, ver, val, nbytes,
-                                         dirty=True)
+                                         dirty=True, bumps=kr)
                 for ekey, eent in res.flushes:
                     self._flush_entry(ekey, eent, t.block)
                 if res.stored and self.cache.write_back:
@@ -558,14 +565,20 @@ class AsyncExecutor:
     # ------------------------------------------------------------------
     # sweep loop
     # ------------------------------------------------------------------
-    def sweep(self) -> None:
-        """One overlapped pass over all blocks (bt time steps).
+    def sweep(self, sweeps: Optional[int] = None) -> None:
+        """One overlapped round over all blocks: ``bt * sweeps`` time
+        steps per visit, fused (``sweeps`` defaults to the schedule's
+        temporal fusion ``k``; ``run`` passes less on a truncated final
+        round). One round = one fetch + one fused stencil + one parked
+        writeback (with ``sweeps`` version bumps) per unit.
 
-        No sweep-end drain: up to ``depth`` tail visits stay parked in
-        the window so the next sweep's head overlaps them. Call
+        No round-end drain: up to ``depth`` tail visits stay parked in
+        the window so the next round's head overlaps them. Call
         ``finish()`` (or ``gather()``/``run()``, which do) to force the
         host store consistent.
         """
+        kr = self.temporal if sweeps is None else sweeps
+        assert 1 <= kr <= self.temporal, (kr, self.temporal)
         plan = self.plan
         held: Dict[str, jax.Array] = {}
         shared: Dict[str, Optional[jax.Array]] = {
@@ -585,13 +598,13 @@ class AsyncExecutor:
             self._exec_decompress(
                 [t for t in btasks if t.kind == "decompress"]
             )
-            shared = self._exec_stencil(i, shared, held)
+            shared = self._exec_stencil(i, shared, held, kr)
             self._exec_compress(
                 [t for t in btasks if t.kind == "compress"]
             )
-            self._park_writebacks(btasks)
+            self._park_writebacks(btasks, kr)
         assert not self._dev and not self._staged and not self._outvals
-        self.sweeps_done += 1
+        self.sweeps_done += kr
 
     def finish(self) -> None:
         """Drain the window: every issued writeback is *committed* —
@@ -671,8 +684,12 @@ class AsyncExecutor:
         """
         assert total_steps % self.cfg.bt == 0
         last_ckpt = self._timer()
-        for _ in range(total_steps // self.cfg.bt):
-            self.sweep()
+        remaining = total_steps // self.cfg.bt
+        while remaining:
+            # truncated final round: fuse only what remains
+            kr = min(self.temporal, remaining)
+            self.sweep(kr)
+            remaining -= kr
             if ckpt_policy is not None and ckpt_policy.due(
                 self.sweeps_done, self._timer() - last_ckpt
             ):
@@ -714,6 +731,7 @@ class AsyncExecutor:
                     "name": self.schedule.name,
                     "codec_sync": self.schedule.codec_sync,
                     "window": self.schedule.window,
+                    "temporal": self.schedule.temporal,
                 },
                 "depth": self.depth,
                 "cache_bytes": self.cache.budget_bytes,
@@ -1017,6 +1035,7 @@ class AsyncExecutor:
                 schedule = Schedule(
                     spec["name"], codec_sync=spec["codec_sync"],
                     window=spec["window"],
+                    temporal=spec.get("temporal", 1),
                 )
         ex = cls(
             OOCConfig.from_dict(extra["cfg"]),

@@ -54,6 +54,7 @@ import numpy as np
 from repro.core.blocks import BlockPlan
 from repro.core.taskgraph import Transfer, summarize_transfers
 from repro.kernels.stencil import ops as stencil_ops
+from repro.kernels.stencil.ref import HALO
 from repro.kernels.zfp import ops as zfp_ops
 from repro.kernels.zfp.ref import Compressed
 
@@ -87,6 +88,41 @@ class OOCConfig:
     @property
     def plan(self) -> BlockPlan:
         return BlockPlan(self.shape[0], self.ndiv, self.bt)
+
+    def temporal_plan(self, temporal: int = 1) -> BlockPlan:
+        """The block plan a ``temporal-k`` schedule runs against:
+        fusing ``k`` sweeps per block visit widens the halo to
+        ``radius * bt * k`` planes per side (same unit cover of
+        [0, Z), wider common regions).
+
+        Validates the widened footprint with a clear error instead of
+        the bare assertions deeper in ``BlockPlan``: the halo width
+        must fit the block interior, or remainders/commons would be
+        empty or overlapping.
+        """
+        if temporal < 1:
+            raise ValueError(
+                f"temporal fusion must be >= 1 sweeps, got {temporal}"
+            )
+        if self.shape[0] % self.ndiv:
+            raise ValueError(
+                f"Z={self.shape[0]} must divide into ndiv={self.ndiv} "
+                "equal blocks"
+            )
+        block = self.shape[0] // self.ndiv
+        halo = HALO * self.bt * temporal
+        # ndiv >= 3 has interior remainders [s+H, e-H), empty at
+        # block == 2H; ndiv <= 2 only needs the fetched extent valid
+        if 2 * halo > block or (self.ndiv >= 3 and 2 * halo >= block):
+            raise ValueError(
+                f"halo-width {halo} (= radius {HALO} x bt {self.bt} x "
+                f"temporal {temporal}) exceeds the block interior: "
+                f"block={block} planes (Z={self.shape[0]}, "
+                f"ndiv={self.ndiv}) needs block "
+                f"{'>' if self.ndiv >= 3 else '>='} 2*halo={2 * halo}. "
+                "Lower the temporal fusion k, bt, or ndiv."
+            )
+        return BlockPlan(self.shape[0], self.ndiv, self.bt * temporal)
 
     def to_dict(self) -> Dict[str, object]:
         """JSON-able description (checkpoint manifests); inverse of
@@ -190,8 +226,12 @@ class HostUnitStore:
     here so both engines see byte-identical host state.
     """
 
-    def __init__(self, cfg: OOCConfig):
+    def __init__(self, cfg: OOCConfig, plan: Optional[BlockPlan] = None):
         self.cfg = cfg
+        # the unit layout this store is decomposed under — a temporal-k
+        # engine passes its halo-widened plan (same cover, wider
+        # commons); default is the config's base plan
+        self.plan = plan if plan is not None else cfg.plan
         self._units: Dict[Tuple[str, str, int], object] = {}
         # writebacks since seeding, per unit (seeded units are v0) —
         # the executor's fetch-after-writeback hazard tracking and the
@@ -360,7 +400,7 @@ class HostUnitStore:
         (In production this is the I/O layer; unit-wise so the full
         volume never has to exist on the device.)"""
         cfg = self.cfg
-        plan = cfg.plan
+        plan = self.plan
         for name, arr in full.items():
             spec = cfg.fields[name]
             assert arr.shape == cfg.shape
@@ -409,7 +449,7 @@ class HostUnitStore:
         out = np.zeros(cfg.shape, dtype=cfg.dtype)
         comp_spans: List[Tuple[int, int]] = []
         comp_payloads: List[Compressed] = []
-        for kind, idx, (lo, hi) in cfg.plan.units():
+        for kind, idx, (lo, hi) in self.plan.units():
             stored = self.get(name, kind, idx)
             if isinstance(stored, Compressed):
                 dev, _, _ = self.stage(name, kind, idx)
@@ -433,6 +473,12 @@ class OutOfCoreWave:
     write back, then the next block. This is the numerics ground truth;
     ``repro.core.executor.AsyncExecutor`` runs the same ops overlapped
     and must stay bit-identical to it.
+
+    ``temporal=k`` runs the engine as the temporal-k ground truth:
+    every visit fetches the halo-k widened footprint, advances the
+    fused ``bt*k`` steps on device, and writes each unit back once
+    with ``k`` version bumps (one codec round-trip per *round*, not
+    per sweep — temporal blocking reduces lossy re-encodes too).
     """
 
     def __init__(
@@ -441,11 +487,13 @@ class OutOfCoreWave:
         p_prev: np.ndarray,
         p_cur: np.ndarray,
         vel2: np.ndarray,
+        temporal: int = 1,
     ):
         self.cfg = cfg
-        self.plan = cfg.plan
+        self.temporal = temporal
+        self.plan = cfg.temporal_plan(temporal)
         self.plan.check_cover()
-        self.store = HostUnitStore(cfg)
+        self.store = HostUnitStore(cfg, plan=self.plan)
         self.transfers: List[Transfer] = []
         self.sweeps_done = 0
         self.store.seed({"p_prev": p_prev, "p_cur": p_cur, "vel2": vel2})
@@ -463,17 +511,20 @@ class OutOfCoreWave:
         return dev
 
     def _write_unit(self, name: str, kind: str, idx: int, value: jax.Array,
-                    sweep: int, block: int) -> None:
-        """Device -> host for one unit, compressing on device."""
+                    sweep: int, block: int, bump: int = 1) -> None:
+        """Device -> host for one unit, compressing on device.
+        ``bump`` is the number of sweeps this single writeback commits
+        (= the round's fused sweep count under temporal-k)."""
         spec = self.cfg.fields[name]
         raw = int(value.size) * value.dtype.itemsize
+        ver = self.store.version_of(name, kind, idx) + bump
         if spec.compressed:
             comp = zfp_ops.compress(
                 value, planes=spec.planes, ndim=3, backend=self.cfg.backend
             )
-            wire = self.store.put(name, kind, idx, comp)
+            wire = self.store.put(name, kind, idx, comp, version=ver)
         else:
-            wire = self.store.put(name, kind, idx, value)
+            wire = self.store.put(name, kind, idx, value, version=ver)
         self.transfers.append(
             Transfer("d2h", name, (kind, idx), raw, wire, sweep, block)
         )
@@ -505,9 +556,14 @@ class OutOfCoreWave:
         return out
 
     # ------------------------------------------------------------------
-    def sweep(self) -> None:
-        """One pass over all blocks; advances the volume by bt steps."""
+    def sweep(self, sweeps: Optional[int] = None) -> None:
+        """One pass over all blocks; advances the volume by
+        ``bt * sweeps`` steps (``sweeps`` defaults to the engine's
+        temporal fusion and may be smaller on a truncated final
+        round — never larger, the halo only covers ``temporal``)."""
         cfg, plan = self.cfg, self.plan
+        kr = self.temporal if sweeps is None else sweeps
+        assert 1 <= kr <= self.temporal, (kr, self.temporal)
         h, b = plan.halo, plan.block
         sweep_no = self.sweeps_done
         held: Dict[str, jax.Array] = {}  # lower half of C_{i-1} at t+bt
@@ -523,29 +579,35 @@ class OutOfCoreWave:
                     # keep the time-t common region for block i+1
                     new_shared[name] = arr[b : b + 2 * h]
                 dev[name] = arr
-            pp, pc = stencil_ops.temporal_steps(
+            pp, pc = stencil_ops.fused_temporal_steps(
                 dev["p_prev"], dev["p_cur"], dev["vel2"],
-                steps=cfg.bt, backend=cfg.backend,
+                steps=cfg.bt * kr, backend=cfg.backend,
             )
             s, _ = plan.owned(i)
             for name, new in (("p_prev", pp), ("p_cur", pc)):
                 owned = new[h : h + b]
                 rlo, rhi = plan.remainder(i)
                 self._write_unit(
-                    name, "R", i, owned[rlo - s : rhi - s], sweep_no, i
+                    name, "R", i, owned[rlo - s : rhi - s], sweep_no, i,
+                    bump=kr,
                 )
                 if i > 0:
                     cm = jnp.concatenate([held[name + str(i - 1)], owned[:h]])
-                    self._write_unit(name, "C", i - 1, cm, sweep_no, i)
+                    self._write_unit(
+                        name, "C", i - 1, cm, sweep_no, i, bump=kr
+                    )
                 if i < plan.ndiv - 1:
                     held[name + str(i)] = owned[b - h : b]
             shared = {n: new_shared.get(n) for n in cfg.fields}
-        self.sweeps_done += 1
+        self.sweeps_done += kr
 
     def run(self, total_steps: int) -> None:
         assert total_steps % self.cfg.bt == 0
-        for _ in range(total_steps // self.cfg.bt):
-            self.sweep()
+        remaining = total_steps // self.cfg.bt
+        while remaining:
+            kr = min(self.temporal, remaining)
+            self.sweep(kr)
+            remaining -= kr
 
     def finish(self) -> None:
         """API parity with ``AsyncExecutor``: the synchronous engine

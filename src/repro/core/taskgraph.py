@@ -47,6 +47,15 @@ executor:
                 ``k`` earlier having fully drained. This is the
                 prefetch depth the live executor enforces (the paper's
                 three-stream pipeline holds 2-3 blocks resident).
+* ``temporal-k`` (``temporal2``, ``temporal-4``, ...) unitgrain plus
+                temporal blocking *across sweeps*: each block visit
+                fuses ``k`` consecutive sweeps (``k * bt`` time steps)
+                before writing back, against a halo widened to
+                ``radius * bt * k`` planes. One visit = one fetch,
+                one fused stencil, one writeback carrying ``k``
+                version bumps — steady-state wire bytes per simulated
+                step drop by ~``k`` (the compression x temporal-
+                blocking synergy of arXiv 2309.08864).
 """
 
 from __future__ import annotations
@@ -84,14 +93,23 @@ class Transfer:
 def summarize_transfers(transfers: List[Transfer]) -> Dict[str, int]:
     """Per-direction raw/wire byte totals of a transfer log, with the
     write-back flush and overlapped-snapshot shares of d2h broken out.
-    Shared by both engines so their summaries stay dict-comparable."""
+    Shared by both engines so their summaries stay dict-comparable.
+
+    Per-direction *counts* are reported too (one Transfer record = one
+    link crossing): a temporal-k visit logs one fetch per unit no
+    matter how many fused sweeps it advances, so counts — like the
+    residency manager's lookup/deposit denominators — stay comparable
+    across schedules while version counters advance k per visit.
+    """
     tot = {
         "h2d_raw": 0, "h2d_wire": 0, "d2h_raw": 0, "d2h_wire": 0,
         "d2h_flush_wire": 0, "d2h_ckpt_wire": 0,
+        "h2d_count": 0, "d2h_count": 0,
     }
     for t in transfers:
         tot[f"{t.direction}_raw"] += t.raw_bytes
         tot[f"{t.direction}_wire"] += t.wire_bytes
+        tot[f"{t.direction}_count"] += 1
         if t.flush:
             tot["d2h_flush_wire"] += t.wire_bytes
         if t.ckpt:
@@ -130,6 +148,9 @@ class Schedule:
     name: str
     codec_sync: bool = False  # codec calls pay per-call sync (cuZFP)
     window: Optional[int] = None  # max block visits in flight (None = off)
+    # sweeps fused per block visit (temporal blocking across sweeps);
+    # 1 = every visit advances one sweep (all pre-temporal schedules)
+    temporal: int = 1
 
 
 PAPER = Schedule("paper", codec_sync=True)
@@ -138,6 +159,7 @@ UNITGRAIN = Schedule("unitgrain")
 OVERLAP = Schedule("overlap")
 
 _DEPTH_RE = re.compile(r"depth-?(\d+)")
+_TEMPORAL_RE = re.compile(r"temporal-?(\d+)")
 
 
 def depth_k(k: int) -> Schedule:
@@ -146,9 +168,19 @@ def depth_k(k: int) -> Schedule:
     return Schedule(f"depth{k}", window=k)
 
 
+def temporal_k(k: int) -> Schedule:
+    """Unitgrain-style schedule fusing ``k`` sweeps per block visit.
+    ``temporal1`` is graph-identical to ``unitgrain`` (same tids, same
+    versions, same transfers) — only the schedule name differs."""
+    if k < 1:
+        raise ValueError(f"temporal-k fusion must be >= 1, got {k}")
+    return Schedule(f"temporal{k}", temporal=k)
+
+
 def get_schedule(sched: Union[str, Schedule]) -> Schedule:
     """Resolve a schedule name ("paper", "unitgrain", "overlap",
-    "depth2", "depth-3", ...) to a Schedule strategy.
+    "depth2", "depth-3", "temporal4", "temporal-2", ...) to a Schedule
+    strategy.
 
     >>> get_schedule("paper").codec_sync
     True
@@ -156,6 +188,8 @@ def get_schedule(sched: Union[str, Schedule]) -> Schedule:
     3
     >>> get_schedule("unitgrain").window is None
     True
+    >>> get_schedule("temporal-4").temporal
+    4
     """
     if isinstance(sched, Schedule):
         return sched
@@ -168,6 +202,9 @@ def get_schedule(sched: Union[str, Schedule]) -> Schedule:
     m = _DEPTH_RE.fullmatch(sched)
     if m:
         return depth_k(int(m.group(1)))
+    m = _TEMPORAL_RE.fullmatch(sched)
+    if m:
+        return temporal_k(int(m.group(1)))
     raise ValueError(f"unknown schedule: {sched!r}")
 
 
@@ -224,6 +261,16 @@ def build_sweep_tasks(
     while the tail of the previous sweep is still computing or
     writing back.
 
+    A ``temporal-k`` schedule groups the ``sweeps`` into rounds of
+    ``kr = min(k, sweeps_remaining)``: every block visit fetches the
+    halo-k widened footprint (``BlockPlan(z, ndiv, bt*k)`` — same unit
+    cover of [0, Z), wider commons), runs one fused ``bt*kr``-step
+    stencil, and writes each unit back exactly once with ``kr``
+    version bumps. Fetch-after-writeback hazard edges and the
+    residency replay are computed against the widened footprint, and
+    the final round truncates (``kr < k``) when ``sweeps`` is not a
+    multiple of ``k``.
+
     ``cache_bytes`` models the executor's device residency manager
     (``repro.core.unitcache.DeviceResidencyManager``): writebacks
     deposit their payload, read-only fields deposit on first fetch, and
@@ -261,7 +308,9 @@ def build_sweep_tasks(
             "expected 'overlapped' or 'quiesced'"
         )
     sched = get_schedule(schedule)
-    plan = cfg.plan
+    # temporal-k widens the halo to radius*bt*k and fuses k sweeps per
+    # visit; sweeps that don't divide k truncate on the final round
+    plan = cfg.temporal_plan(sched.temporal)
     z, y, x = cfg.shape
     itemsize = 4 if cfg.dtype == "float32" else 8
     plane_bytes = y * x * itemsize
@@ -355,9 +404,19 @@ def build_sweep_tasks(
             cache.note_ckpt_flush(nbytes)
             ckpt_tasks_emitted += 1
 
-    for s in range(sweeps):
+    # temporal rounds: each block visit advances kr = min(k, remaining)
+    # sweeps at once (truncation on the final round keeps total steps
+    # exact). ``s`` labels the round's *starting* sweep — the value the
+    # live executor's sweeps_done holds when it issues the fetch.
+    rounds: List[Tuple[int, int]] = []
+    s0 = 0
+    while s0 < sweeps:
+        kr = min(sched.temporal, sweeps - s0)
+        rounds.append((s0, kr))
+        s0 += kr
+    for rnd, (s, kr) in enumerate(rounds):
         for i in range(plan.ndiv):
-            visit = s * plan.ndiv + i
+            visit = rnd * plan.ndiv + i
             pre = f"s{s}b{i}"
             window_dep: Tuple[str, ...] = ()
             if sched.window is not None and visit >= sched.window:
@@ -425,9 +484,10 @@ def build_sweep_tasks(
                             field=name, unit=(kind, idx), sweep=s,
                             ver=ver,
                         ))
-            # stencil: bt steps over the fetched extent; window_dep kept
-            # explicitly so the bound survives fully-elided fetch sets
-            cells = (plan.block + 2 * plan.halo) * y * x * cfg.bt
+            # stencil: bt*kr fused steps over the (halo-k widened)
+            # fetched extent; window_dep kept explicitly so the bound
+            # survives fully-elided fetch sets
+            cells = (plan.block + 2 * plan.halo) * y * x * cfg.bt * kr
             deps = tuple(h2d_ids + dec_ids) + (
                 (prev_compute,) if prev_compute else ()
             )
@@ -444,7 +504,9 @@ def build_sweep_tasks(
                     continue
                 for kind, idx in plan.writeback_units(i):
                     key = (name, (kind, idx))
-                    ver = version.get(key, 0) + 1
+                    # one writeback carries every fused sweep's bump:
+                    # k version bumps per visit, one d2h payload
+                    ver = version.get(key, 0) + kr
                     version[key] = ver
                     raw = unit_planes(kind, idx) * plane_bytes
                     wire = raw * wire_ratio(spec, itemsize)
@@ -466,6 +528,7 @@ def build_sweep_tasks(
                         res = cache.deposit(
                             key, ver, None,
                             exact_nbytes(spec, kind, idx), dirty=True,
+                            bumps=kr,
                         )
                         deposit_of[key] = dep[0]
                         for ekey, eent in res.flushes:
@@ -483,7 +546,7 @@ def build_sweep_tasks(
                     )
                     writeback_of[key] = last_d2h
             drain_of_visit[visit] = last_d2h
-        if ckpt_every and (s + 1) % ckpt_every == 0:
+        if ckpt_every and (s + kr) % ckpt_every == 0:
             # the checkpoint cut at this sweep boundary, at the frozen
             # version vector (every version this sweep issued)
             if ckpt_mode == "overlapped":

@@ -95,6 +95,9 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     deposits: int = 0
+    # sweep advances the deposited payloads carry, NOT fetch/deposit
+    # multiplicity: a temporal-k visit is ONE deposit / k bumps
+    version_bumps: int = 0
     refusals: int = 0  # deposits rejected (entry larger than budget)
     evictions: int = 0
     hit_wire_bytes: int = 0  # h2d link bytes elided by hits
@@ -128,6 +131,7 @@ class CacheStats:
             "hits": self.hits,
             "misses": self.misses,
             "deposits": self.deposits,
+            "version_bumps": self.version_bumps,
             "refusals": self.refusals,
             "evictions": self.evictions,
             "hit_wire_bytes": self.hit_wire_bytes,
@@ -261,6 +265,7 @@ class DeviceResidencyManager:
         value: Any,
         nbytes: int,
         dirty: bool = False,
+        bumps: int = 0,
     ) -> DepositResult:
         """Insert/replace the unit's payload at ``version`` (MRU),
         evicting LRU entries until the budget holds. ``dirty`` marks
@@ -268,7 +273,15 @@ class DeviceResidencyManager:
         write-through it is ignored and every deposit is clean. A
         payload larger than the whole budget is refused (and any stale
         entry for the key dropped). Evicted *dirty* entries are
-        returned for the caller to flush."""
+        returned for the caller to flush.
+
+        ``bumps`` is the number of sweeps this payload advanced its
+        unit past the previous version — ``k`` for a temporal-k
+        writeback deposit, ``0`` for a read-only fetch deposit. It is
+        pure accounting (``CacheStats.version_bumps``): one fused
+        visit counts as ONE deposit however many sweeps it carries,
+        and the bump counter is what scales with simulated time."""
+        self.stats.version_bumps += int(bumps)
         dirty = bool(dirty) and self.write_back
         if key in self._entries:
             old = self._entries[key]

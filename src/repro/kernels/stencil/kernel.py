@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import ref
 from .ref import C, C0, HALO
 
 _B = HALO  # z/y tile size; must equal HALO for block alignment (see above)
@@ -108,3 +109,83 @@ def wave_step_pallas(
         out_shape=out_shape,
         interpret=interpret,
     )(*args)
+
+
+# ----------------------------------------------------------------------
+# fused multi-step kernel (temporal-k): k rungs in VMEM per y-tile
+# ----------------------------------------------------------------------
+#
+# One grid step advances a (Z, K, X) y-tile by ``steps`` time steps
+# without bouncing intermediates through HBM. The extended tile is the
+# 3-neighbour concatenation (Z, 3K, X) with K = steps * HALO: garbage
+# creeps inward HALO planes per rung from the extended tile's y-edges,
+# so after ``steps`` rungs at most K planes per side are polluted and
+# the central [K, 2K) slice is exact. Global z/x Dirichlet BCs are
+# re-applied every rung by ``ref.pad_bc`` (same expression tree per
+# element as ``ref.ladder_steps`` -> bit-identical in f32); the y
+# zero-padding of the outermost tiles stays exactly zero through the
+# rungs (vel2 = 0 there, so p_next = 2*0 - 0 + 0*lap), which *is* the
+# global y BC. VMEM per grid step is ~8 extended tiles (2 fields x
+# {in, rung, out} + vel2): Z here is an out-of-core block extent
+# (B + 2H planes), so the fused kernel tiles the axis the engine
+# doesn't.
+
+
+def _multistep_kernel(*refs, steps: int):
+    k = steps * HALO
+    ppm, ppc, ppp, pcm, pcc, pcp, vm, vc, vp = refs[:9]
+    pp_out, pc_out = refs[9:]
+    pp = jnp.concatenate([ppm[...], ppc[...], ppp[...]], axis=1)
+    pc = jnp.concatenate([pcm[...], pcc[...], pcp[...]], axis=1)
+    vel2 = jnp.concatenate([vm[...], vc[...], vp[...]], axis=1)
+    for _ in range(steps):
+        p_next, _ = ref.wave_step(ref.pad_bc(pp), ref.pad_bc(pc), vel2)
+        pp, pc = pc, p_next
+    pp_out[...] = pp[:, k : 2 * k, :]
+    pc_out[...] = pc[:, k : 2 * k, :]
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "interpret"))
+def wave_multistep_pallas(
+    p_prev: jax.Array,
+    p_cur: jax.Array,
+    vel2: jax.Array,
+    *,
+    steps: int,
+    interpret: bool = True,
+):
+    """``steps`` fused acoustic steps. All inputs interior (Z, Y, X)
+    f32; returns interior (p_prev, p_cur) after ``steps`` steps with
+    zero BC — the same contract as ``ref.ladder_steps``. Y must be a
+    multiple of K = steps * HALO (the y-tile width); callers that
+    can't satisfy that fall back to the single-step ladder
+    (``ops.fused_temporal_steps``)."""
+    z, y, x = p_cur.shape
+    assert p_prev.shape == vel2.shape == (z, y, x)
+    k = steps * HALO
+    assert y % k == 0, (y, k)
+    grid = (y // k,)
+
+    def nb_spec(dy):
+        return pl.BlockSpec((z, k, x), lambda ky, dy=dy: (0, ky + dy, 0))
+
+    pad = ((0, 0), (k, k), (0, 0))
+    args = [jnp.pad(f, pad) for f in (p_prev, p_cur, vel2)]
+    in_specs = [nb_spec(dy) for _ in range(3) for dy in range(3)]
+    out_specs = [
+        pl.BlockSpec((z, k, x), lambda ky: (0, ky, 0)),
+        pl.BlockSpec((z, k, x), lambda ky: (0, ky, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((z, y, x), p_cur.dtype),
+        jax.ShapeDtypeStruct((z, y, x), p_cur.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(_multistep_kernel, steps=steps),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(args[0], args[0], args[0], args[1], args[1], args[1],
+      args[2], args[2], args[2])

@@ -74,3 +74,44 @@ def temporal_steps(
         return pp, pc
     (pp, pc), _ = jax.lax.scan(body, (p_prev, p_cur), None, length=steps)
     return pp, pc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("steps", "backend", "interpret")
+)
+def fused_temporal_steps(
+    p_prev: jax.Array,
+    p_cur: jax.Array,
+    vel2: jax.Array,
+    *,
+    steps: int,
+    backend: Backend = "ref",
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Temporal-k entry point: ``steps`` fused time steps, dispatched
+    on the step count and backend.
+
+    On a compiled Pallas backend with more than one step (and a y
+    extent the fused tile width ``steps * HALO`` divides), this runs
+    ``kernel.wave_multistep_pallas`` — one kernel launch that keeps
+    every intermediate rung in VMEM. Everywhere else (ref backend,
+    interpret-mode/CPU pallas, steps == 1, or an indivisible y) it
+    falls back to ``steps`` sequential single-step calls via
+    ``temporal_steps``. Both paths compute the identical per-element
+    expression tree, so the dispatch never changes results — the
+    fused kernel is bit-identical to the ladder in f32
+    (tests/test_temporal.py pins this).
+    """
+    if (
+        backend == "pallas"
+        and not interpret
+        and steps > 1
+        and p_cur.shape[1] % (steps * ref.HALO) == 0
+    ):
+        return kernel.wave_multistep_pallas(
+            p_prev, p_cur, vel2, steps=steps, interpret=interpret
+        )
+    return temporal_steps(
+        p_prev, p_cur, vel2, steps=steps, backend=backend,
+        interpret=interpret,
+    )

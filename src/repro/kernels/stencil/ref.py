@@ -90,6 +90,27 @@ def run_steps(
     return pp, pc
 
 
+def ladder_steps(
+    p_prev: jax.Array,
+    p_cur: jax.Array,
+    vel2: jax.Array,
+    steps: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """The temporal-blocking *ladder*: ``steps`` explicitly unrolled
+    single steps on interior-shaped fields, zero BC re-applied every
+    rung. This is the bit-exact reference for the fused multi-step
+    Pallas kernel (``kernel.wave_multistep_pallas``), which computes
+    the same expression tree per element on y-tiles instead of the
+    full volume. Same semantics as ``run_steps`` (scan), unrolled so
+    a failing rung is visible in a traceback.
+    """
+    pp, pc = p_prev, p_cur
+    for _ in range(steps):
+        p_next, _ = wave_step(pad_bc(pp), pad_bc(pc), vel2)
+        pp, pc = pc, p_next
+    return pp, pc
+
+
 def ricker_source(shape: Tuple[int, int, int], dtype=jnp.float32) -> jax.Array:
     """Smooth initial condition: a Ricker-like wavelet in the volume
     centre (gives wave fields representative of the paper's workload)."""

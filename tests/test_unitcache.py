@@ -204,3 +204,61 @@ def test_unit_wire_bytes_matches_compressed_nbytes():
     )
     # sanity: analytic words match the ref codec's accounting
     assert zfp_ref.payload_words(3, 12, 32) > 0
+
+
+def test_temporal_deposit_counts_one_fetch_k_bumps():
+    """Regression (temporal-k accounting): a fused k-sweep writeback is
+    ONE deposit carrying k version bumps — deposits/lookups stay
+    per-visit denominators while ``version_bumps`` scales with
+    simulated time; a read-only fetch deposit bumps nothing."""
+    c = DeviceResidencyManager(100)
+    res = c.deposit("rw-unit", 4, "payload", 40, dirty=True, bumps=4)
+    assert res.stored
+    assert c.stats.deposits == 1  # NOT 4
+    assert c.stats.version_bumps == 4
+    c.deposit("ro-unit", 0, "payload", 40)  # fetch deposit: no bump
+    assert c.stats.deposits == 2
+    assert c.stats.version_bumps == 4
+    d = c.stats.as_dict()
+    assert d["version_bumps"] == 4
+    # next fused visit: again one deposit, k more bumps
+    c.deposit("rw-unit", 8, "payload", 40, dirty=True, bumps=4)
+    assert c.stats.deposits == 3
+    assert c.stats.version_bumps == 8
+
+
+def test_temporal_visit_logs_one_fetch_in_summaries():
+    """End to end: ``summarize_transfers`` counts a temporal-k visit
+    as one h2d/d2h link crossing per unit (not k), while the engine's
+    version counters advance k per visit."""
+    import numpy as np
+
+    from repro.core.executor import AsyncExecutor
+    from repro.core.outofcore import OOCConfig, paper_code_fields
+    from repro.kernels.stencil import ref as stencil_ref
+
+    shape = (96, 12, 12)
+    p_cur = np.asarray(
+        stencil_ref.ricker_source(shape), dtype=np.float32
+    )
+    fields = paper_code_fields(1)
+    cfg = OOCConfig(shape, 2, 1, fields)
+    live = AsyncExecutor(
+        cfg, 0.95 * p_cur, p_cur, np.full(shape, 0.07, np.float32),
+        schedule="temporal4", cache_bytes=1 << 30,
+    )
+    live.run(8)  # 2 fused rounds
+    s = live.transfer_summary()
+    plan = live.plan
+    units_per_round = sum(
+        len(plan.fetch_units(i)) for i in range(plan.ndiv)
+    )
+    # cold round fetches every unit of every field once; the cached
+    # steady state elides rw refetches — never MORE than one crossing
+    # per unit per round
+    assert s["h2d_count"] <= 2 * len(fields) * units_per_round
+    cache = live.stats()["cache"]
+    # 2 rounds x 2 rw fields x writeback units, one deposit each,
+    # carrying 4 bumps apiece
+    assert cache["version_bumps"] == 4 * cache["d2h_elided"]
+    assert live.sweeps_done == 8

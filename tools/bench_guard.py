@@ -1,0 +1,115 @@
+"""BENCH trajectory guard: fail CI on a smoke-benchmark regression.
+
+Compares the fresh ``BENCH_smoke.json`` (written by
+``benchmarks/run.py --smoke``) against a baseline — the previous CI
+run's artifact when one is available, else the committed seed under
+``benchmarks/baselines/`` — and exits non-zero when any guarded
+metric regressed by more than the threshold (default 10%).
+
+Guarded metrics are the *deterministic* ones (wire bytes and modeled
+timeline seconds — both are exact functions of the config and the
+residency replay); wall-clock fields are recorded in the artifact but
+never guarded, since CI runner noise would make them flap.
+
+Usage (from the repo root):
+
+  python tools/bench_guard.py --current BENCH_smoke.json \\
+      --baseline benchmarks/baselines/BENCH_smoke.json
+
+A metric present only in the current artifact (a newly added series)
+passes with a note; a metric that disappeared fails, so a series
+cannot silently stop being tracked.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Iterator
+
+# leaf keys to guard, wherever they appear in the artifact tree.
+# Steady-state wire bytes per sweep/step track the elision machinery;
+# modeled timeline seconds track the DES pricing; the wire-per-step
+# ratio is the temporal-blocking invariant (k=4 <= 0.3x k=1).
+GUARDED_SUFFIXES = (
+    "steady_h2d_wire_per_sweep",
+    "steady_d2h_wire_per_sweep",
+    "wire_per_step",
+    "wire_per_step_ratio",
+    "sweep_time_s",
+    "modeled_sweep_time_s",
+    "paper_sweep_time_s",
+    "overlapped_makespan_s",
+    "quiesced_makespan_s",
+)
+
+
+def iter_metrics(node, prefix: str = "") -> Iterator[tuple[str, float]]:
+    """Flatten the artifact to ``path -> value`` for guarded leaves."""
+    if isinstance(node, dict):
+        for key, val in sorted(node.items()):
+            path = f"{prefix}.{key}" if prefix else key
+            if isinstance(val, dict):
+                yield from iter_metrics(val, path)
+            elif key in GUARDED_SUFFIXES and isinstance(val, (int, float)):
+                yield path, float(val)
+
+
+def compare(baseline: dict, current: dict, threshold: float) -> tuple[list, list, list]:
+    """``(regressions, missing, new)`` between two artifacts."""
+    base = dict(iter_metrics(baseline))
+    cur = dict(iter_metrics(current))
+    regressions = []
+    for path, bval in sorted(base.items()):
+        cval = cur.get(path)
+        if cval is None:
+            continue  # reported via `missing`
+        if cval > bval * (1.0 + threshold):
+            regressions.append((path, bval, cval))
+    missing = sorted(set(base) - set(cur))
+    new = sorted(set(cur) - set(base))
+    return regressions, missing, new
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--current",
+        required=True,
+        help="fresh BENCH_smoke.json to judge",
+    )
+    ap.add_argument(
+        "--baseline",
+        required=True,
+        help="baseline artifact (previous run or committed seed)",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="allowed fractional increase per metric (default 0.10)",
+    )
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    regressions, missing, new = compare(baseline, current, args.threshold)
+    for path in new:
+        print(f"NEW      {path} (not in baseline; passes)")
+    for path in missing:
+        print(f"MISSING  {path} (tracked series disappeared)")
+    for path, bval, cval in regressions:
+        pct = 100.0 * (cval / bval - 1.0)
+        print(f"REGRESSED {path}: {bval:g} -> {cval:g} (+{pct:.1f}%)")
+    if regressions or missing:
+        print(f"bench guard: FAIL ({len(regressions)} regressed, {len(missing)} missing)")
+        return 1
+    n = len(dict(iter_metrics(current)))
+    print(f"bench guard: OK ({n} metrics within {100 * args.threshold:.0f}% of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

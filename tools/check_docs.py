@@ -23,10 +23,7 @@ import sys
 import tempfile
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
-DOC_FILES = sorted(
-    [ROOT / "README.md", ROOT / "ROADMAP.md"]
-    + list((ROOT / "docs").glob("*.md"))
-)
+DOC_FILES = sorted([ROOT / "README.md", ROOT / "ROADMAP.md"] + list((ROOT / "docs").glob("*.md")))
 
 # [text](target) — excluding images handled the same way via the same
 # pattern (the leading ! just ends up in the link text)
@@ -74,10 +71,8 @@ def run_snippets() -> list[str]:
                     try:
                         exec(compile(block, f"{doc.name}[{i}]", "exec"), ns)
                     except Exception as e:  # noqa: BLE001 - report all
-                        errors.append(
-                            f"{doc.relative_to(ROOT)} python block {i}: "
-                            f"{type(e).__name__}: {e}"
-                        )
+                        loc = f"{doc.relative_to(ROOT)} python block {i}"
+                        errors.append(f"{loc}: {type(e).__name__}: {e}")
                         break
             finally:
                 os.chdir(old)
@@ -86,8 +81,7 @@ def run_snippets() -> list[str]:
 
 def main() -> int:
     errors = check_links()
-    print(f"link check: {len(DOC_FILES)} files, "
-          f"{'OK' if not errors else 'FAIL'}")
+    print(f"link check: {len(DOC_FILES)} files, {'OK' if not errors else 'FAIL'}")
     snippet_errors = run_snippets()
     print(f"snippet check: {'OK' if not snippet_errors else 'FAIL'}")
     for e in errors + snippet_errors:
