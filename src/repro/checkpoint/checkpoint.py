@@ -24,11 +24,18 @@ import json
 import os
 import pathlib
 import shutil
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.distributed.fault import (
+    ChecksumError,
+    InjectedFault,
+    UnrecoverableFault,
+)
 
 try:  # optional dep: only needed when (de)compressing checkpoints
     import zstandard
@@ -101,7 +108,18 @@ class ShardWriter:
         zstd_level: Optional[int] = None,
         lossy_planes: Optional[int] = None,
         extra: Optional[Dict[str, Any]] = None,
+        injector=None,
+        retry=None,
+        stats=None,
     ):
+        # self-healing hooks (PR 7): ``injector`` replays a FaultPlan's
+        # shard-write failures, ``retry`` bounds the attempts per
+        # shard, ``stats`` optionally mirrors ``shard_retries`` into
+        # the executor's CacheStats
+        self.injector = injector
+        self.retry = retry
+        self.stats = stats
+        self.shard_retries = 0
         if zstd_level is None:
             zstd_level = 3 if HAVE_ZSTD else 0
         self._cctx = (
@@ -163,16 +181,49 @@ class ShardWriter:
             blob = arr.tobytes()
         if self._cctx:
             blob = self._cctx.compress(blob)
-        _write_durable(self.tmp / fname, blob)
+        # per-shard integrity digest of the on-disk bytes: verified by
+        # ``_decode_leaf`` on every load, so a shard that rots (or is
+        # tampered with) after publish is refused with its name instead
+        # of silently seeding a resumed run
+        entry["crc32"] = zlib.crc32(blob) & 0xFFFFFFFF
+        attempts = self.retry.attempts if self.retry is not None else 1
+        last: Optional[Exception] = None
+        for attempt in range(attempts):
+            if attempt:
+                self.shard_retries += 1
+                if self.stats is not None:
+                    self.stats.shard_retries += 1
+            if self.injector is not None and self.injector.shard_fault(
+                key, attempt
+            ):
+                last = InjectedFault(
+                    f"injected shard-write failure: {key} "
+                    f"attempt {attempt}"
+                )
+                continue
+            _write_durable(self.tmp / fname, blob)
+            break
+        else:
+            raise UnrecoverableFault(
+                f"shard write of {key} failed after {attempts} "
+                f"attempt(s): {last}"
+            ) from last
         self._manifest["leaves"][key] = entry
         return len(blob)
 
     def finalize(self, keep: int = 3) -> str:
-        """Write the manifest, publish ``step_<k>`` atomically, gc."""
+        """Write the manifest, publish ``step_<k>`` atomically, gc.
+
+        The manifest carries its own digest (``manifest_crc32`` over
+        the canonical sorted-key JSON of everything else, the ``extra``
+        payload included), so ``read_manifest`` refuses a manifest
+        whose bytes changed after publish."""
         assert not self._finalized, "writer already finalized"
+        manifest = dict(self._manifest)
+        manifest["manifest_crc32"] = _manifest_digest(manifest)
         _write_durable(
             self.tmp / "manifest.json",
-            json.dumps(self._manifest).encode(),
+            json.dumps(manifest).encode(),
         )
         # every shard and the manifest are fsynced above; sync the tmp
         # dir (directory entries) before the rename, and the parent
@@ -196,6 +247,15 @@ class ShardWriter:
         self._finalized = True
 
 
+def _manifest_digest(manifest: Dict[str, Any]) -> int:
+    """crc32 over the canonical (sorted-key) JSON of the manifest with
+    the digest key itself excluded."""
+    body = {k: v for k, v in manifest.items() if k != "manifest_crc32"}
+    return zlib.crc32(
+        json.dumps(body, sort_keys=True).encode()
+    ) & 0xFFFFFFFF
+
+
 def save(
     directory: str,
     step: int,
@@ -205,6 +265,9 @@ def save(
     lossy_planes: Optional[int] = None,
     keep: int = 3,
     extra: Optional[Dict[str, Any]] = None,
+    injector=None,
+    retry=None,
+    stats=None,
 ) -> str:
     """Atomically persist ``tree`` as ``<directory>/step_<step>``.
 
@@ -223,6 +286,7 @@ def save(
     w = ShardWriter(
         directory, step, zstd_level=zstd_level,
         lossy_planes=lossy_planes, extra=extra,
+        injector=injector, retry=retry, stats=stats,
     )
     try:
         for key, leaf in _flatten(tree).items():
@@ -263,14 +327,39 @@ def latest(directory: str) -> Optional[str]:
 
 
 def read_manifest(path: str) -> Dict[str, Any]:
-    """The checkpoint's manifest dict (step, leaf table, extra)."""
-    return json.loads(
+    """The checkpoint's manifest dict (step, leaf table, extra).
+
+    Verifies the manifest's own digest when present (PR 7 writers): a
+    manifest whose bytes — leaf table *or* ``extra`` payload — changed
+    after publish is refused, naming the checkpoint, instead of
+    steering a restore at the wrong shards or progress record.
+    """
+    manifest = json.loads(
         (pathlib.Path(path) / "manifest.json").read_text()
     )
+    want = manifest.get("manifest_crc32")  # absent in pre-PR 7 ckpts
+    if want is not None and int(want) != _manifest_digest(manifest):
+        raise ChecksumError(
+            f"restore refused: manifest of checkpoint {path} does not "
+            "match its recorded digest — the manifest (leaf table or "
+            "extra payload) was modified after publish; restore from "
+            "an earlier step_<k> directory"
+        )
+    return manifest
 
 
 def _decode_leaf(p: pathlib.Path, entry: Dict[str, Any]) -> np.ndarray:
     blob = (p / entry["file"]).read_bytes()
+    want = entry.get("crc32")  # absent in pre-PR 7 checkpoints
+    if want is not None:
+        got = zlib.crc32(blob) & 0xFFFFFFFF
+        if got != int(want):
+            raise ChecksumError(
+                f"restore refused: shard {entry['file']} in {p} is "
+                f"corrupt (crc32 {got:#010x}, manifest records "
+                f"{int(want):#010x}) — restore from an earlier "
+                "step_<k> directory"
+            )
     codec = entry["codec"]
     if codec.endswith("zstd"):
         blob = _require_zstd().ZstdDecompressor().decompress(blob)

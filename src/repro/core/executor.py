@@ -120,7 +120,14 @@ from repro.core.taskgraph import (
     summarize_transfers,
 )
 from repro.core.unitcache import DeviceResidencyManager, Entry
-from repro.distributed.fault import ReissuePolicy
+from repro.distributed.fault import (
+    FaultError,
+    FaultInjector,
+    InjectedCrash,
+    ReissuePolicy,
+    RetryPolicy,
+    UnrecoverableFault,
+)
 from repro.kernels.stencil import ops as stencil_ops
 from repro.kernels.zfp import ops as zfp_ops
 from repro.kernels.zfp.ref import Compressed
@@ -201,6 +208,36 @@ class CheckpointPolicy:
         )
 
 
+@dataclass
+class RecoveryPolicy:
+    """Automatic restore-from-last-good for ``AsyncExecutor.run``.
+
+    On an *unrecoverable* fault — retry budget exhausted, a checksum
+    mismatch with no valid source, an injected crash point — the run
+    rolls back to the last published checkpoint under ``directory``
+    and replays from there, at most ``max_restarts`` times before the
+    fault propagates. If ``directory`` holds no checkpoint when the
+    run starts, a baseline snapshot of the entry state is taken first
+    (there must be a last-good to roll back *to*). Combine with
+    ``ckpt_policy`` for periodic cuts that bound the replay distance.
+
+    Rollback discards all live state the crash would have lost —
+    the in-flight window, device residency, any half-drained
+    overlapped snapshot (its tmp dir is aborted; the previous
+    published checkpoint is untouched) — then reloads the newest
+    checkpoint that passes integrity verification (a corrupt latest
+    falls back to the previous ``step_<k>``). Replay is
+    deterministic, so a recovered run finishes bit-identical to a
+    fault-free one; ``CacheStats.recoveries`` / ``replayed_sweeps``
+    account the cost.
+    """
+
+    directory: str
+    max_restarts: int = 3
+    zstd_level: Optional[int] = None
+    keep: int = 3
+
+
 def _payload_nbytes(value) -> int:
     """On-wire bytes of a device payload (what a D2H of it would move) —
     matches the analytic ``taskgraph.unit_wire_bytes`` the model uses."""
@@ -234,6 +271,8 @@ class AsyncExecutor:
         cache_bytes: int = 0,
         policy: str = "write-back",
         reissue: Optional[ReissuePolicy] = None,
+        retry: Optional[RetryPolicy] = None,
+        injector: Optional[FaultInjector] = None,
     ):
         """Build a live executor over ``cfg``.
 
@@ -262,6 +301,20 @@ class AsyncExecutor:
             once on the spare stream instead of aborting the
             gather/checkpoint, and over-deadline puts are counted as
             stragglers. ``None`` keeps the fail-fast behavior.
+            (Legacy PR 4 name — a ``ReissuePolicy`` IS a two-attempt
+            ``RetryPolicy`` and doubles as one on the wire.)
+        retry:
+            Optional ``RetryPolicy`` applied to *every* H2D/D2H link
+            crossing by the host store (bounded attempts, accounted
+            exponential backoff) and to checkpoint shard writes.
+            Defaults to ``reissue`` when only that is given, so one
+            policy governs all crossings.
+        injector:
+            Optional ``repro.distributed.fault.FaultInjector``
+            replaying a deterministic ``FaultPlan`` on every crossing,
+            shard write, and sweep boundary (crash points). The same
+            plan drives ``pipeline.simulate(..., faults=plan)`` for
+            model/live attempt-multiset parity.
         """
         self.cfg = cfg
         self.schedule = get_schedule(schedule)
@@ -274,7 +327,17 @@ class AsyncExecutor:
         # buffered live; the bound is an executor property the
         # depth-k schedules merely make explicit in the graph.
         self.depth = self.schedule.window or 2
-        self.store = HostUnitStore(cfg, plan=self.plan)
+        # one policy governs all crossings: ``retry`` if given, else
+        # the legacy ``reissue`` (a two-attempt RetryPolicy); the
+        # flush spare-stream path keeps consulting ``self.reissue``
+        self.reissue = reissue if reissue is not None else retry
+        self.retry = retry if retry is not None else reissue
+        self.injector = injector
+        self.cache = DeviceResidencyManager(cache_bytes, policy=policy)
+        self.store = HostUnitStore(
+            cfg, plan=self.plan, injector=injector, retry=self.retry,
+            stats=self.cache.stats,
+        )
         seeds = (p_prev, p_cur, vel2)
         if any(s is not None for s in seeds):
             assert all(s is not None for s in seeds), (
@@ -283,8 +346,7 @@ class AsyncExecutor:
             self.store.seed(
                 {"p_prev": p_prev, "p_cur": p_cur, "vel2": vel2}
             )
-        self.cache = DeviceResidencyManager(cache_bytes, policy=policy)
-        self.reissue = reissue
+        self.recovery_log: List[Dict[str, object]] = []
         # monotonic clock for flush straggler detection; swappable in
         # tests for deterministic timing
         self._timer = time.perf_counter
@@ -672,6 +734,7 @@ class AsyncExecutor:
         self,
         total_steps: int,
         ckpt_policy: Optional[CheckpointPolicy] = None,
+        recovery: Optional[RecoveryPolicy] = None,
     ) -> None:
         """Advance the run by ``total_steps`` (a multiple of ``bt``).
 
@@ -681,15 +744,60 @@ class AsyncExecutor:
         quiesced per ``policy.mode``. The final ``finish()`` completes
         any snapshot still draining, so ``run`` always returns with
         the last due checkpoint published (``last_checkpoint_path``).
+
+        With ``recovery`` the run is *self-healing*: an unrecoverable
+        fault (retries exhausted, checksum mismatch with no valid
+        source, an injected crash point) rolls the executor back to
+        the last published checkpoint under ``recovery.directory`` and
+        replays, up to ``recovery.max_restarts`` times. A baseline
+        snapshot is taken at entry when the directory holds none.
+        Replay is deterministic: a recovered run's output is
+        bit-identical to a fault-free one (tests/test_chaos.py).
         """
         assert total_steps % self.cfg.bt == 0
+        target = self.sweeps_done + total_steps // self.cfg.bt
+        restarts = 0
+        while True:
+            try:
+                if recovery is not None and ckpt.latest(
+                    recovery.directory
+                ) is None:
+                    # a rollback needs a last-good to roll back TO
+                    self.checkpoint(
+                        recovery.directory,
+                        zstd_level=recovery.zstd_level,
+                        keep=recovery.keep,
+                    )
+                self._run_to(target, ckpt_policy)
+                return
+            except FaultError as e:
+                if (
+                    recovery is None
+                    or restarts >= recovery.max_restarts
+                    or ckpt.latest(recovery.directory) is None
+                ):
+                    raise
+                restarts += 1
+                self._rollback(recovery.directory, e)
+
+    def _run_to(
+        self, target: int, ckpt_policy: Optional[CheckpointPolicy]
+    ) -> None:
+        """The sweep loop proper: advance to ``target`` completed
+        sweeps, consulting ``ckpt_policy`` and the injector's crash
+        points at every boundary, then drain."""
         last_ckpt = self._timer()
-        remaining = total_steps // self.cfg.bt
-        while remaining:
+        while self.sweeps_done < target:
             # truncated final round: fuse only what remains
-            kr = min(self.temporal, remaining)
+            kr = min(self.temporal, target - self.sweeps_done)
             self.sweep(kr)
-            remaining -= kr
+            if self.injector is not None and self.injector.crash_point(
+                self.sweeps_done
+            ):
+                raise InjectedCrash(
+                    f"injected crash at sweep boundary "
+                    f"{self.sweeps_done}"
+                )
             if ckpt_policy is not None and ckpt_policy.due(
                 self.sweeps_done, self._timer() - last_ckpt
             ):
@@ -711,6 +819,82 @@ class AsyncExecutor:
                 )
                 last_ckpt = self._timer()
         self.finish()
+
+    # ------------------------------------------------------------------
+    # rollback-and-replay (the recovery loop)
+    # ------------------------------------------------------------------
+    def _rollback(self, directory: str, cause: Exception) -> None:
+        """Reset to the last-good checkpoint under ``directory``.
+
+        Discards everything the fault would have lost on a real crash
+        — the in-flight window, staged/parked device values, device
+        residency, any half-drained overlapped snapshot (aborted; its
+        tmp dir vanishes and the previously *published* checkpoint is
+        untouched) — then reloads the newest checkpoint that passes
+        integrity verification, falling back to earlier ``step_<k>``
+        directories if the latest is corrupt.
+        """
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.abort()
+            self._ckpt_writer = None
+        self._ckpt_queue.clear()
+        self._ckpt_host_queue.clear()
+        self._ckpt_units_meta = {}
+        self._pending.clear()
+        self._dev.clear()
+        self._staged.clear()
+        self._outvals.clear()
+        self._outraw.clear()
+        self._flush_times.clear()
+        # cold residency (device state died with the "process"), same
+        # cumulative stats surface; the byte gauges reset with it
+        stats = self.cache.stats
+        self.cache = DeviceResidencyManager(
+            self.cache.budget_bytes, policy=self.cache.policy
+        )
+        self.cache.stats = stats
+        stats.dirty_bytes = 0
+        stats.pinned_bytes = 0
+        self.store.stats = stats
+        step, leaves, extra, path = self._load_last_good(directory)
+        self.store.load_state(leaves, extra["store"])
+        prior = self.sweeps_done
+        self.sweeps_done = int(extra["progress"]["sweeps_done"])
+        self._ver = {
+            (u["field"], (u["kind"], int(u["idx"]))): int(u["version"])
+            for u in extra["store"]["units"].values()
+            if int(u["version"]) > 0
+        }
+        stats.recoveries += 1
+        stats.replayed_sweeps += max(0, prior - self.sweeps_done)
+        self.recovery_log.append({
+            "fault": f"{type(cause).__name__}: {cause}",
+            "from_sweep": prior,
+            "resumed_at": self.sweeps_done,
+            "checkpoint": path,
+        })
+
+    @staticmethod
+    def _load_last_good(directory: str):
+        """Newest checkpoint under ``directory`` that passes manifest,
+        shard, and unit-digest verification; corrupt ones are skipped
+        (newest-first) so one rotten snapshot cannot strand the run."""
+        base = pathlib.Path(directory)
+        candidates = sorted(
+            (p for p in base.iterdir() if p.name.startswith("step_")),
+            reverse=True,
+        ) if base.exists() else []
+        last: Optional[Exception] = None
+        for p in candidates:
+            try:
+                step, leaves, extra = ckpt.load(str(p))
+                return step, leaves, extra, str(p)
+            except FaultError as e:  # corrupt: try the previous cut
+                last = e
+        raise UnrecoverableFault(
+            f"no loadable checkpoint under {directory!r} to roll "
+            f"back to: {last}"
+        ) from last
 
     # ------------------------------------------------------------------
     # overlapped periodic checkpointing (the fifth flush point)
@@ -816,6 +1000,8 @@ class AsyncExecutor:
         self._ckpt_writer = ckpt.ShardWriter(
             directory, self.sweeps_done,
             zstd_level=zstd_level, extra=self._ckpt_extra,
+            injector=self.injector, retry=self.retry,
+            stats=self.cache.stats,
         )
         self._ckpt_keep = keep
         self._ckpt_cut_sweep = self.sweeps_done - 1
@@ -977,6 +1163,8 @@ class AsyncExecutor:
             directory, self.sweeps_done, leaves,
             zstd_level=zstd_level, lossy_planes=lossy_planes,
             keep=keep, extra=extra,
+            injector=self.injector, retry=self.retry,
+            stats=self.cache.stats,
         )
         self.last_checkpoint_path = path
         self.ckpt_stats["snapshots"] += 1
@@ -992,6 +1180,8 @@ class AsyncExecutor:
         cache_bytes: Optional[int] = None,
         policy: Optional[str] = None,
         reissue: Optional[ReissuePolicy] = None,
+        retry: Optional[RetryPolicy] = None,
+        injector: Optional[FaultInjector] = None,
     ) -> "AsyncExecutor":
         """Rebuild a live executor from ``checkpoint()`` state.
 
@@ -1045,7 +1235,7 @@ class AsyncExecutor:
                 else cache_bytes
             ),
             policy=prog["policy"] if policy is None else policy,
-            reissue=reissue,
+            reissue=reissue, retry=retry, injector=injector,
         )
         ex.store.load_state(leaves, extra["store"])
         ex.sweeps_done = int(prog["sweeps_done"])
@@ -1082,4 +1272,14 @@ class AsyncExecutor:
             "ckpt_pending_units": (
                 len(self._ckpt_queue) + len(self._ckpt_host_queue)
             ),
+            # the self-healing wire: store-side retry/integrity
+            # counters, accounted backoff, injector fire counts, and
+            # the rollback-and-replay history
+            "wire": dict(self.store.wire_stats),
+            "wire_backoff_s": self.store.backoff_s,
+            "injected": (
+                dict(self.injector.counts)
+                if self.injector is not None else {}
+            ),
+            "recoveries": list(self.recovery_log),
         }

@@ -44,6 +44,8 @@ velocity field (transferred to device, never written back).
 
 from __future__ import annotations
 
+import zlib
+from collections import Counter
 from dataclasses import dataclass
 from typing import Dict, List, Literal, Optional, Tuple
 
@@ -53,6 +55,13 @@ import numpy as np
 
 from repro.core.blocks import BlockPlan
 from repro.core.taskgraph import Transfer, summarize_transfers
+from repro.distributed.fault import (
+    ChecksumError,
+    FaultInjector,
+    InjectedFault,
+    RetryPolicy,
+    UnrecoverableFault,
+)
 from repro.kernels.stencil import ops as stencil_ops
 from repro.kernels.stencil.ref import HALO
 from repro.kernels.zfp import ops as zfp_ops
@@ -60,7 +69,7 @@ from repro.kernels.zfp.ref import Compressed
 
 __all__ = [
     "FieldSpec", "OOCConfig", "OutOfCoreWave", "HostUnitStore",
-    "Transfer", "paper_code_fields", "unit_shards",
+    "Transfer", "paper_code_fields", "unit_shards", "unit_checksum",
 ]
 
 Role = Literal["rw", "ro"]
@@ -183,6 +192,27 @@ def paper_code_fields(code: int, f32: bool = True) -> Dict[str, FieldSpec]:
     raise ValueError(code)
 
 
+def unit_checksum(value, version: int) -> int:
+    """crc32 integrity digest of one unit: payload (+emax for
+    compressed units) chained with the version it realizes, so a stale
+    payload can never pass as a newer one. Computed from *host* bytes
+    (for device values ``np.asarray`` is the materialization — callers
+    on hot paths pass the already-materialized copy)."""
+    crc = zlib.crc32(str(int(version)).encode())
+    if isinstance(value, Compressed):
+        crc = zlib.crc32(
+            np.ascontiguousarray(np.asarray(value.payload)).tobytes(), crc
+        )
+        crc = zlib.crc32(
+            np.ascontiguousarray(np.asarray(value.emax)).tobytes(), crc
+        )
+    else:
+        crc = zlib.crc32(
+            np.ascontiguousarray(np.asarray(value)).tobytes(), crc
+        )
+    return crc & 0xFFFFFFFF
+
+
 def unit_shards(
     field: str, kind: str, idx: int, value, version: int,
 ) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
@@ -204,17 +234,27 @@ def unit_shards(
     }
     leaves: Dict[str, np.ndarray] = {}
     if isinstance(value, Compressed):
-        leaves[f"{ukey}.payload"] = np.asarray(value.payload)
-        leaves[f"{ukey}.emax"] = np.asarray(value.emax)
+        payload, emax = np.asarray(value.payload), np.asarray(value.emax)
+        leaves[f"{ukey}.payload"] = payload
+        leaves[f"{ukey}.emax"] = emax
         meta.update(
             codec="zfp", shape=list(value.shape),
             planes=value.planes,
             ndim_spatial=value.ndim_spatial,
             dtype=str(value.dtype),
         )
+        host: object = Compressed(
+            payload, emax, value.shape, value.planes,
+            value.ndim_spatial, value.dtype,
+        )
     else:
-        leaves[ukey] = np.asarray(value)
+        host = leaves[ukey] = np.asarray(value)
         meta["codec"] = "raw"
+    # integrity digest of the persisted bytes: verified by
+    # HostUnitStore.load_state on restore, before any payload is
+    # consumed (the manifest additionally digests the shard files
+    # themselves — this one pins payload<->version)
+    meta["crc32"] = unit_checksum(host, version)
     return leaves, meta
 
 
@@ -226,7 +266,15 @@ class HostUnitStore:
     here so both engines see byte-identical host state.
     """
 
-    def __init__(self, cfg: OOCConfig, plan: Optional[BlockPlan] = None):
+    def __init__(
+        self,
+        cfg: OOCConfig,
+        plan: Optional[BlockPlan] = None,
+        *,
+        injector: Optional[FaultInjector] = None,
+        retry: Optional[RetryPolicy] = None,
+        stats=None,
+    ):
         self.cfg = cfg
         # the unit layout this store is decomposed under — a temporal-k
         # engine passes its halo-widened plan (same cover, wider
@@ -241,36 +289,146 @@ class HostUnitStore:
         # of ``_host_versions`` until a flush ``put``s the payload.
         self._versions: Dict[Tuple[str, str, int], int] = {}
         self._host_versions: Dict[Tuple[str, str, int], int] = {}
+        # integrity digests of the committed host payloads (crc32 over
+        # payload+emax+version, ``unit_checksum``): recorded at every
+        # put, verified at every fetch (h2d), every flush commit (d2h)
+        # and on restore — a corrupted unit is caught before any
+        # stencil step can consume it
+        self._crc: Dict[Tuple[str, str, int], int] = {}
+        # the self-healing hooks: ``injector`` replays a FaultPlan on
+        # every crossing, ``retry`` bounds the attempts, ``stats`` is
+        # an optional CacheStats mirror for the executor's counters
+        self.injector = injector
+        self.retry = retry
+        self.stats = stats
+        # one (op, field, unit, version, attempts) record per
+        # completed crossing — the live side of the model/live
+        # attempt-multiset parity contract
+        self.wire_log: List[Tuple[str, str, str, int, int]] = []
+        self.wire_stats: Dict[str, int] = {
+            "h2d_retries": 0, "d2h_retries": 0, "wire_faults": 0,
+            "checksum_failures": 0, "wire_stragglers": 0,
+        }
+        self.backoff_s = 0.0  # accounted backoff time (never slept)
+
+    # ------------------------------------------------------------------
+    # the integrity-checked wire
+    # ------------------------------------------------------------------
+    def _count(self, name: str) -> None:
+        self.wire_stats[name] += 1
+        if self.stats is not None:
+            setattr(self.stats, name, getattr(self.stats, name) + 1)
+
+    def _wire(self, op: str, field: str, kind: str, idx: int,
+              version: int, host, crc: int):
+        """One integrity-checked link crossing under the retry policy.
+
+        ``host`` is the already-materialized host-side value and
+        ``crc`` the checksum it must realize. Each attempt consults the
+        injector (transfer failure / in-flight bit-flip), then
+        verifies the received bytes against ``crc`` — corruption is
+        *always* detected here, before the payload can be stored or
+        shipped to a stencil step. Failed attempts retry up to
+        ``retry.attempts`` with accounted (never slept) exponential
+        backoff; exhaustion raises ``UnrecoverableFault`` chaining the
+        last failure. Returns the verified value.
+        """
+        unit = f"{kind}{idx}"
+        attempts = self.retry.attempts if self.retry else 1
+        last: Optional[Exception] = None
+        for attempt in range(attempts):
+            if attempt:
+                self._count(f"{op}_retries")
+                if self.retry is not None:
+                    self.backoff_s += self.retry.backoff(attempt)
+            fault = None
+            if self.injector is not None:
+                fault = self.injector.transfer_fault(
+                    op, field, unit, version, attempt
+                )
+            if fault == "transfer":
+                self._count("wire_faults")
+                last = InjectedFault(
+                    f"injected {op} failure: {field}.{unit} "
+                    f"v{version} attempt {attempt}"
+                )
+                continue
+            received = host
+            if fault == "corrupt":
+                self._count("wire_faults")
+                if isinstance(host, Compressed):
+                    received = Compressed(
+                        FaultInjector.corrupt(host.payload), host.emax,
+                        host.shape, host.planes, host.ndim_spatial,
+                        host.dtype,
+                    )
+                else:
+                    received = FaultInjector.corrupt(host)
+            got = unit_checksum(received, version)
+            if got != crc:
+                self._count("checksum_failures")
+                last = ChecksumError(
+                    f"{op} checksum mismatch for unit {field}.{unit} "
+                    f"v{version}: expected {crc:#010x}, got {got:#010x}"
+                )
+                continue
+            if self.injector is not None and self.injector.straggle(
+                op, field, unit, version
+            ) > 1.0:
+                self._count("wire_stragglers")
+            self.wire_log.append((op, field, unit, int(version),
+                                  attempt + 1))
+            return received
+        raise UnrecoverableFault(
+            f"{op} of unit {field}.{unit} v{version} failed after "
+            f"{attempts} attempt(s): {last}"
+        ) from last
+
+    def attempt_multiset(self) -> Counter:
+        """Multiset of completed crossings with their attempt counts —
+        compare against ``Timeline.attempt_multiset()`` under the same
+        ``FaultPlan`` for model/live parity."""
+        return Counter(self.wire_log)
 
     def put(
         self, field: str, kind: str, idx: int, value,
         version: Optional[int] = None,
+        on_wire: bool = True,
     ) -> int:
         """Store; returns wire bytes (what crossed the link).
 
         ``version`` pins the committed version this payload realizes
         (deferred writebacks and residency flushes); without it the
         counter bumps by one (the synchronous engine's in-order path).
-        Either way the host copy is current afterwards.
+        Either way the host copy is current afterwards. The D2H
+        crossing is integrity-checked: the checksum computed from the
+        source bytes must match the received copy (injected corruption
+        and transfer failures retry under the store's ``RetryPolicy``).
+        ``on_wire=False`` marks a host-local put (seeding) that never
+        crosses the link — exempt from injection, but still digested.
         """
         key = (field, kind, idx)
         if version is None:
             version = self._versions.get(key, -1) + 1
         assert version >= self._host_versions.get(key, 0), key
-        # store the payload BEFORE advancing the version maps: a put
-        # that fails mid-copy must not leave host_current() true over
-        # stale bytes (the flush-retry contract relies on this order)
+        # materialize once — for device values this is the D2H
         if isinstance(value, Compressed):
-            host = Compressed(
+            host: object = Compressed(
                 np.asarray(value.payload), np.asarray(value.emax),
                 value.shape, value.planes, value.ndim_spatial, value.dtype,
             )
             wire = host.nbytes()
-            self._units[key] = host
         else:
-            arr = np.asarray(value)
-            wire = arr.nbytes
-            self._units[key] = arr
+            host = np.asarray(value)
+            wire = host.nbytes
+        crc = unit_checksum(host, version)
+        if on_wire:
+            host = self._wire("d2h", field, kind, idx, version, host, crc)
+        # store the payload BEFORE advancing the version maps: a put
+        # that fails mid-copy must not leave host_current() true over
+        # stale bytes (the flush-retry contract relies on this order)
+        self._units[key] = host
+        self._crc[key] = crc
         self._versions[key] = max(version, self._versions.get(key, 0))
         self._host_versions[key] = version
         return wire
@@ -375,10 +533,18 @@ class HostUnitStore:
     ) -> None:
         """Rebuild the store from a ``state_dict`` snapshot: payloads,
         compressed-unit handles, and the version vector (host ==
-        committed at a checkpoint cut, so both maps restore equal)."""
+        committed at a checkpoint cut, so both maps restore equal).
+
+        Restore is a verification point: every unit carrying a
+        recorded ``crc32`` is re-digested and must match — a snapshot
+        tampered with (or bit-rotted) after ``read_manifest``'s
+        shard-level digests is still refused here, naming the unit,
+        before any payload can seed a resumed run.
+        """
         self._units.clear()
         self._versions.clear()
         self._host_versions.clear()
+        self._crc.clear()
         for ukey, u in meta["units"].items():
             key = (u["field"], u["kind"], int(u["idx"]))
             if u["codec"] == "zfp":
@@ -390,8 +556,19 @@ class HostUnitStore:
                 )
             else:
                 value = np.ascontiguousarray(leaves[ukey])
-            self._units[key] = value
             ver = int(u["version"])
+            crc = unit_checksum(value, ver)
+            want = u.get("crc32")  # pre-PR 7 snapshots carry none
+            if want is not None and int(want) != crc:
+                raise ChecksumError(
+                    f"restore refused: unit {ukey} v{ver} does not "
+                    f"match its recorded digest (expected "
+                    f"{int(want):#010x}, got {crc:#010x}) — the "
+                    "snapshot shard is corrupt; restore from an "
+                    "earlier step_<k> directory"
+                )
+            self._units[key] = value
+            self._crc[key] = crc
             self._versions[key] = ver
             self._host_versions[key] = ver
 
@@ -413,20 +590,34 @@ class HostUnitStore:
                 )
                 units = [(k, i, c) for (k, i, _), c in zip(units, comp)]
             for kind, idx, unit in units:
-                self.put(name, kind, idx, unit)
+                # seeding is host-local decomposition, not a link
+                # crossing — exempt from fault injection (and from the
+                # wire log the parity tests compare)
+                self.put(name, kind, idx, unit, on_wire=False)
 
     def stage(self, field: str, kind: str, idx: int):
         """Host -> device for one unit WITHOUT decompressing.
 
         Returns ``(device_value, raw_bytes, wire_bytes)`` where
         ``device_value`` is a device array or an on-device
-        ``Compressed`` awaiting a decompress task.
+        ``Compressed`` awaiting a decompress task. The H2D crossing is
+        integrity-checked against the checksum recorded when the unit
+        was committed: a tampered host payload or in-flight corruption
+        raises before the bytes can reach a decompress/stencil task.
         """
         # a stale host copy must never cross the link: write-back
         # keeps the invariant "committed-ahead-of-host implies
         # dirty-resident", so every real fetch sees current bytes
         assert self.host_current(field, kind, idx), (field, kind, idx)
+        key = (field, kind, idx)
         stored = self.get(field, kind, idx)
+        version = self._host_versions.get(key, 0)
+        crc = self._crc.get(key)
+        if crc is None:  # pre-digest stores (legacy direct loads)
+            crc = self._crc[key] = unit_checksum(stored, version)
+        stored = self._wire(
+            "h2d", field, kind, idx, version, stored, crc
+        )
         if isinstance(stored, Compressed):
             dev = Compressed(
                 jnp.asarray(stored.payload), jnp.asarray(stored.emax),
@@ -436,6 +627,11 @@ class HostUnitStore:
             raw = int(np.prod(stored.shape)) * np.dtype(stored.dtype).itemsize
             return dev, raw, stored.nbytes()
         return jnp.asarray(stored), stored.nbytes, stored.nbytes
+
+    def checksum_of(self, field: str, kind: str, idx: int) -> int:
+        """The recorded integrity digest of the committed host
+        payload (tests and the checkpoint writer read it)."""
+        return self._crc[(field, kind, idx)]
 
     def gather(self, name: str) -> np.ndarray:
         """Reassemble a full field from host units (decompressing).

@@ -30,6 +30,7 @@ target: host<->HBM streaming over the v5e host link).
 
 from __future__ import annotations
 
+from collections import Counter
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -39,7 +40,7 @@ from repro.core.taskgraph import (  # noqa: F401  (re-exported API)
     build_sweep_tasks,
     get_schedule,
 )
-from repro.distributed.fault import ReissuePolicy
+from repro.distributed.fault import FaultPlan, ReissuePolicy, RetryPolicy
 
 
 @dataclass(frozen=True)
@@ -107,6 +108,15 @@ class Timeline:
     attempts: Dict[str, List[Tuple[str, Span]]] = field(
         default_factory=dict
     )
+    # attempt count per transfer task under an injected FaultPlan
+    # (failed/corrupt attempts + the succeeding one); tasks absent
+    # here completed on their first attempt
+    wire_attempts: Dict[str, int] = field(default_factory=dict)
+    # transfer tasks whose retry budget the plan exhausted — the live
+    # engine raises UnrecoverableFault on these (and, with a
+    # RecoveryPolicy, rolls back); the model schedules every attempt
+    # and reports the casualty here
+    failed: List[str] = field(default_factory=list)
 
     @property
     def makespan(self) -> float:
@@ -151,6 +161,22 @@ class Timeline:
         how paper Fig. 6 decides transfer- vs compute-bound."""
         return max(self.busy_by_resource().items(), key=lambda kv: kv[1])[0]
 
+    def attempt_multiset(self) -> Counter:
+        """Multiset of transfer identities with their attempt counts —
+        ``(kind, field, unit, version, attempts)`` — the model side of
+        the parity contract with ``HostUnitStore.attempt_multiset()``:
+        under the same ``FaultPlan`` and ``RetryPolicy`` the live
+        engine and this replay must produce the same multiset."""
+        out: Counter = Counter()
+        for t in self.tasks.values():
+            if t.kind in ("h2d", "d2h") and t.unit is not None:
+                out[(
+                    t.kind, t.field, f"{t.unit[0]}{t.unit[1]}",
+                    int(t.version),
+                    self.wire_attempts.get(t.tid, 1),
+                )] += 1
+        return out
+
     def transfer_wire(self) -> Dict[str, float]:
         """Modeled wire bytes by direction with the flush and
         overlapped-snapshot shares broken out — the model-side mirror
@@ -192,7 +218,9 @@ def _duration(task: Task, hw: Hardware) -> float:
 
 def simulate(tasks: List[Task], hw: Hardware,
              straggler: Optional[Dict[str, float]] = None,
-             reissue: Optional[ReissuePolicy] = None) -> Timeline:
+             reissue: Optional[ReissuePolicy] = None,
+             retry: Optional[RetryPolicy] = None,
+             faults: Optional[FaultPlan] = None) -> Timeline:
     """List-schedule tasks on FIFO resources honouring dependencies.
 
     ``straggler`` maps task-id prefixes to slowdown factors (fault
@@ -205,12 +233,30 @@ def simulate(tasks: List[Task], hw: Hardware,
     the straggler stop waiting), and the task completes, unblocking
     its dependents, when the reissue lands. Reissued task ids are
     reported in ``Timeline.reissued``.
+
+    ``faults`` prices a deterministic ``FaultPlan`` on every transfer
+    task carrying a unit identity, mirroring the live store's wire
+    loop: each attempt the plan faults (transfer failure or in-flight
+    corruption caught by the checksum) occupies the issuing stream for
+    the full transfer duration, ``retry.backoff(n)`` idles between
+    attempts, and straggle specs multiply the duration in-line. The
+    resulting per-task attempt counts land in ``Timeline.
+    wire_attempts`` (compare with ``HostUnitStore.attempt_multiset()``
+    via ``Timeline.attempt_multiset()``); a task whose retry budget
+    the plan exhausts is reported in ``Timeline.failed`` — the point
+    where the live engine raises ``UnrecoverableFault``. ``retry``
+    defaults to ``reissue``; with neither, every transfer has a single
+    attempt. Fault-injected tasks use this bounded-retry pricing, not
+    the legacy cancel-and-reissue branch.
     """
     free: Dict[str, float] = {}
     spans: Dict[str, Span] = {}
     byid = {t.tid: t for t in tasks}
     reissued: List[str] = []
     attempts: Dict[str, List[Tuple[str, Span]]] = {}
+    wire_attempts: Dict[str, int] = {}
+    failed: List[str] = []
+    pol = retry if retry is not None else reissue
     for t in tasks:
         nominal = _duration(t, hw)
         dur = nominal
@@ -218,8 +264,48 @@ def simulate(tasks: List[Task], hw: Hardware,
             for prefix, slow in straggler.items():
                 if t.tid.startswith(prefix):
                     dur *= slow
+        injected = (
+            faults is not None
+            and t.kind in ("h2d", "d2h")
+            and t.unit is not None
+        )
+        if injected:
+            unitlabel = f"{t.unit[0]}{t.unit[1]}"
+            dur *= faults.straggle(
+                t.kind, t.field, unitlabel, int(t.version)
+            )
         ready = max((spans[d].end for d in t.deps), default=0.0)
         start = max(free.get(t.resource, 0.0), ready)
+        if injected:
+            # bounded-retry pricing, mirroring HostUnitStore._wire:
+            # count the leading attempts the plan faults (identity-
+            # keyed, so live reordering cannot change the answer),
+            # schedule each failed attempt + the succeeding one
+            # back-to-back on the issuing stream with backoff gaps.
+            max_att = pol.attempts if pol is not None else 1
+            n_faulted = 0
+            while n_faulted < max_att and faults.decide(
+                t.kind, t.field, unitlabel, int(t.version), n_faulted
+            ) is not None:
+                n_faulted += 1
+            exhausted = n_faulted >= max_att
+            n_att = max_att if exhausted else n_faulted + 1
+            aspans: List[Tuple[str, Span]] = []
+            cur = start
+            for i in range(n_att):
+                if i and pol is not None:
+                    cur += pol.backoff(i)
+                aspans.append((t.resource, Span(cur, cur + dur)))
+                cur += dur
+            end = cur
+            if n_att > 1:
+                attempts[t.tid] = aspans
+                wire_attempts[t.tid] = n_att
+            if exhausted:
+                failed.append(t.tid)
+            spans[t.tid] = Span(start, end)
+            free[t.resource] = end
+            continue
         end = start + dur
         busy_until = end
         if (
@@ -248,7 +334,9 @@ def simulate(tasks: List[Task], hw: Hardware,
             ]
         spans[t.tid] = Span(start, end)
         free[t.resource] = busy_until
-    return Timeline(spans, byid, reissued, attempts)
+    return Timeline(
+        spans, byid, reissued, attempts, wire_attempts, failed
+    )
 
 
 def sweep_timeline(
@@ -260,6 +348,8 @@ def sweep_timeline(
     ckpt_every: int = 0,
     ckpt_mode: str = "overlapped",
     reissue: Optional[ReissuePolicy] = None,
+    retry: Optional[RetryPolicy] = None,
+    faults: Optional[FaultPlan] = None,
 ) -> Timeline:
     """Replay ``sweeps`` sweeps of ``cfg`` under ``schedule`` on ``hw``.
 
@@ -279,11 +369,13 @@ def sweep_timeline(
     ``"quiesced"`` drains at the boundary — comparing the two
     makespans prices exactly the overlap the checkpoint-aware
     schedule buys. ``reissue`` prices the spare-stream straggler
-    mitigation on all transfer tasks, snapshot flushes included."""
+    mitigation on all transfer tasks, snapshot flushes included.
+    ``retry``/``faults`` price a deterministic ``FaultPlan`` with
+    bounded-retry semantics (see ``simulate``)."""
     return simulate(
         build_sweep_tasks(
             cfg, sweeps=sweeps, schedule=schedule,
             cache_bytes=cache_bytes, stats=stats, policy=policy,
             ckpt_every=ckpt_every, ckpt_mode=ckpt_mode,
-        ), hw, reissue=reissue,
+        ), hw, reissue=reissue, retry=retry, faults=faults,
     )

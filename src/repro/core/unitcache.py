@@ -117,6 +117,16 @@ class CacheStats:
     pinned_bytes: int = 0  # resident bytes currently pinned (live + shadow)
     ckpt_flushes: int = 0  # snapshot D2H materializations of pinned payloads
     ckpt_flush_wire_bytes: int = 0  # link bytes the snapshot flushes paid
+    # self-healing wire (PR 7): the store mirrors its retry/integrity
+    # counters here so one stats surface covers the whole engine
+    h2d_retries: int = 0  # fetch attempts beyond the first
+    d2h_retries: int = 0  # writeback/flush attempts beyond the first
+    wire_faults: int = 0  # injected transfer failures + corruptions seen
+    checksum_failures: int = 0  # integrity mismatches caught on the wire
+    wire_stragglers: int = 0  # crossings flagged straggling by the plan
+    shard_retries: int = 0  # checkpoint shard writes retried
+    recoveries: int = 0  # rollback-and-replay cycles taken by run()
+    replayed_sweeps: int = 0  # sweeps re-executed after rollbacks
 
     @property
     def lookups(self) -> int:
@@ -148,6 +158,14 @@ class CacheStats:
             "pinned_bytes": self.pinned_bytes,
             "ckpt_flushes": self.ckpt_flushes,
             "ckpt_flush_wire_bytes": self.ckpt_flush_wire_bytes,
+            "h2d_retries": self.h2d_retries,
+            "d2h_retries": self.d2h_retries,
+            "wire_faults": self.wire_faults,
+            "checksum_failures": self.checksum_failures,
+            "wire_stragglers": self.wire_stragglers,
+            "shard_retries": self.shard_retries,
+            "recoveries": self.recoveries,
+            "replayed_sweeps": self.replayed_sweeps,
             "hit_rate": self.hit_rate,
         }
 

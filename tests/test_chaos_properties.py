@@ -1,0 +1,109 @@
+"""Hypothesis-driven chaos properties (optional package, like
+tests/test_residency_properties.py): randomized seeded fault plans
+through the deterministic self-healing oracle of tests/test_chaos.py —
+every survivable plan finishes bit-identical to fault-free, and a run
+that does fail leaves a restorable last-good checkpoint behind."""
+
+import numpy as np
+import pytest
+
+from repro.core.executor import (
+    AsyncExecutor,
+    CheckpointPolicy,
+    RecoveryPolicy,
+)
+from repro.core.outofcore import OOCConfig, paper_code_fields
+from repro.distributed.fault import (
+    ChecksumError,
+    FaultInjector,
+    FaultPlan,
+    RetryPolicy,
+    UnrecoverableFault,
+)
+from repro.kernels.stencil import ref as stencil_ref
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+settings.register_profile(
+    "chaos", deadline=None, max_examples=15, derandomize=True
+)
+settings.load_profile("chaos")
+
+SHAPE = (32, 8, 8)
+SWEEPS = 4
+FIELDS = ("p_cur", "p_prev")
+UNITS = ("R0", "R1", "C0")
+RETRY = RetryPolicy(attempts=3, backoff_s=0.001)
+
+
+def _initial(shape=SHAPE):
+    p_cur = np.asarray(stencil_ref.ricker_source(shape), dtype=np.float32)
+    p_prev = 0.95 * p_cur
+    vel2 = np.full(shape, 0.07, dtype=np.float32)
+    return p_prev, p_cur, vel2
+
+
+def _run(plan=None, *, recovery_dir=None, ckpt_every=None):
+    eng = AsyncExecutor(
+        OOCConfig(SHAPE, 2, 1, paper_code_fields(2)), *_initial(),
+        schedule="unitgrain", cache_bytes=0, retry=RETRY,
+        injector=FaultInjector(plan) if plan is not None else None,
+    )
+    eng.run(
+        SWEEPS,
+        ckpt_policy=(
+            CheckpointPolicy(recovery_dir, every_sweeps=ckpt_every,
+                             zstd_level=0)
+            if ckpt_every else None
+        ),
+        recovery=(
+            RecoveryPolicy(recovery_dir, zstd_level=0)
+            if recovery_dir is not None else None
+        ),
+    )
+    return eng
+
+
+@pytest.fixture(scope="module")
+def fault_free():
+    eng = _run()
+    return {n: eng.gather(n) for n in FIELDS}
+
+
+@given(seed=st.integers(0, 10_000), faults=st.integers(1, 2))
+def test_survivable_plans_finish_bit_identical(
+    tmp_path_factory, fault_free, seed, faults
+):
+    """Every plan the generator emits is survivable by construction
+    (fault attempts stay inside the retry budget; crashes have a
+    checkpoint to roll back to): bit-identical output, any seed."""
+    plan = FaultPlan.generate(
+        seed, fields=FIELDS, units=UNITS, sweeps=SWEEPS, faults=faults
+    )
+    tmp = tmp_path_factory.mktemp(f"chaos_{seed}_{faults}")
+    eng = _run(plan, recovery_dir=str(tmp), ckpt_every=2)
+    for name in FIELDS:
+        np.testing.assert_array_equal(eng.gather(name),
+                                      fault_free[name])
+
+
+@given(seed=st.integers(0, 10_000))
+def test_probabilistic_plans_heal_or_fail_clean(
+    tmp_path_factory, fault_free, seed
+):
+    """Under a probabilistic plan the run either completes
+    bit-identical or raises a clean fault — and in the failure case
+    the last published checkpoint still restores (no torn state)."""
+    plan = FaultPlan(seed=seed, p_transfer=0.02, p_corrupt=0.02,
+                     p_crash=0.05)
+    tmp = tmp_path_factory.mktemp(f"prob_{seed}")
+    try:
+        eng = _run(plan, recovery_dir=str(tmp), ckpt_every=2)
+    except (UnrecoverableFault, ChecksumError):
+        resumed = AsyncExecutor.restore(str(tmp))
+        assert 0 <= resumed.sweeps_done <= SWEEPS
+        return
+    for name in FIELDS:
+        np.testing.assert_array_equal(eng.gather(name),
+                                      fault_free[name])

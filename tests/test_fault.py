@@ -1,0 +1,271 @@
+"""Deterministic unit tests for the cluster-control / fault-injection
+plane (``repro.distributed.fault``): heartbeat straggler detection,
+elastic replanning, retry/backoff policies, and the seeded
+``FaultPlan``/``FaultInjector`` pair the self-healing engine and the
+DES share. Everything here is pure Python — no JAX, no filesystem."""
+
+import numpy as np
+import pytest
+
+from repro.distributed.fault import (
+    FAULT_KINDS,
+    ElasticPlan,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    HeartbeatMonitor,
+    ReissuePolicy,
+    RetryPolicy,
+    replan,
+)
+
+
+# ----------------------------------------------------------------------
+# HeartbeatMonitor
+# ----------------------------------------------------------------------
+def _steady(mon, workers, steps, dt=1.0, slow=None, t0=0.0):
+    """Drive ``workers`` through ``steps`` beats; ``slow`` maps worker
+    id -> per-step slowdown factor. Returns the final wall time."""
+    slow = slow or {}
+    now = t0
+    for s in range(steps):
+        now += dt
+        for w in range(workers):
+            mon.beat(w, s, t0 + (s + 1) * dt * slow.get(w, 1.0))
+    return now
+
+
+def test_median_step_time_none_until_history():
+    mon = HeartbeatMonitor(2)
+    assert mon.median_step_time() is None
+    mon.beat(0, 0, 1.0)  # first beat: no interval yet
+    assert mon.median_step_time() is None
+    mon.beat(0, 1, 2.0)
+    assert mon.median_step_time() == pytest.approx(1.0)
+
+
+def test_slow_history_straggler_flagged():
+    mon = HeartbeatMonitor(4, straggler_factor=2.0)
+    # all four beat continuously; worker 3 completes a step every 5s
+    # while the rest step every 1s — flagged from history alone while
+    # everyone's last beat is recent (nobody is "silent")
+    for t in range(1, 31):
+        for w in (0, 1, 2):
+            mon.beat(w, t - 1, float(t))
+        if t % 5 == 0:
+            mon.beat(3, t // 5 - 1, float(t))
+    assert mon.stragglers(now=30.2) == [3]
+
+
+def test_silent_straggler_uses_now_argument():
+    """The PR 7 fix: a worker that simply *stops beating* has a clean
+    step-time history — only the ``now`` argument can expose it. Before
+    the fix ``stragglers`` ignored ``now`` entirely."""
+    mon = HeartbeatMonitor(3, straggler_factor=2.0, dead_after=60.0)
+    _steady(mon, 3, 5, dt=1.0)  # all healthy, median = 1.0
+    # worker 2 goes silent; the others keep beating
+    for s in range(5, 8):
+        for w in (0, 1):
+            mon.beat(w, s, s + 1.0)
+    now = 8.0
+    # silent for 3s > factor(2.0) * median(1.0)
+    assert mon.stragglers(now) == [2]
+    # immediately after its last beat it was NOT a straggler
+    assert mon.stragglers(5.1) == []
+
+
+def test_dead_workers_not_double_reported_as_stragglers():
+    """Silence past ``dead_after`` belongs to ``dead()``; the straggler
+    window is (factor*median, dead_after] so the two compose."""
+    mon = HeartbeatMonitor(3, straggler_factor=2.0, dead_after=10.0)
+    _steady(mon, 3, 5, dt=1.0)
+    for s in range(5, 30):
+        for w in (0, 1):
+            mon.beat(w, s, s + 1.0)
+    now = 30.0  # worker 2 silent for 25s > dead_after
+    assert mon.dead(now) == [2]
+    assert 2 not in mon.stragglers(now)
+
+
+def test_step_time_history_window_bounded():
+    mon = HeartbeatMonitor(1)
+    _steady(mon, 1, 50, dt=1.0)
+    assert len(mon.workers[0].step_times) <= 32
+
+
+# ----------------------------------------------------------------------
+# ElasticPlan / replan
+# ----------------------------------------------------------------------
+def test_replan_shrinks_data_axis_only():
+    p = replan(6, model_parallel=2, global_batch=12)
+    assert p == ElasticPlan(data=3, model=2)
+    assert p.devices == 6
+
+
+def test_replan_respects_batch_divisibility():
+    # 5 data-slots available but batch 12 % 5 != 0 -> fall back to 4
+    p = replan(10, model_parallel=2, global_batch=12)
+    assert p.data == 4
+
+
+def test_replan_asserts_when_model_cannot_fit():
+    with pytest.raises(AssertionError):
+        replan(1, model_parallel=2, global_batch=8)
+
+
+# ----------------------------------------------------------------------
+# RetryPolicy / ReissuePolicy
+# ----------------------------------------------------------------------
+def test_backoff_schedule_exponential():
+    pol = RetryPolicy(attempts=4, backoff_s=0.5, backoff_factor=3.0)
+    assert pol.backoff(0) == 0.0
+    assert pol.backoff(1) == pytest.approx(0.5)
+    assert pol.backoff(2) == pytest.approx(1.5)
+    assert pol.backoff(3) == pytest.approx(4.5)
+
+
+def test_backoff_zero_means_immediate_retry():
+    pol = RetryPolicy(backoff_s=0.0)
+    assert all(pol.backoff(n) == 0.0 for n in range(5))
+
+
+def test_deadline_factor_and_absolute_cap():
+    pol = RetryPolicy(factor=3.0, deadline_s=2.0)
+    assert pol.deadline(0.5) == pytest.approx(1.5)  # factor binds
+    assert pol.deadline(10.0) == pytest.approx(2.0)  # absolute binds
+    assert pol.should_reissue(elapsed=1.6, expected=0.5)
+    assert not pol.should_reissue(elapsed=1.4, expected=0.5)
+
+
+def test_attempts_must_be_positive():
+    with pytest.raises(AssertionError):
+        RetryPolicy(attempts=0)
+
+
+def test_reissue_policy_is_two_attempt_retry():
+    """The legacy PR 4 name maps onto the generalized semantics: one
+    spare-stream reissue == two bounded attempts."""
+    pol = ReissuePolicy(factor=3.0)
+    assert isinstance(pol, RetryPolicy)
+    assert pol.attempts == 2
+    assert pol.deadline(1.0) == pytest.approx(3.0)
+
+
+# ----------------------------------------------------------------------
+# FaultSpec matching
+# ----------------------------------------------------------------------
+def test_spec_wildcards_and_exact_match():
+    s = FaultSpec(kind="corrupt", op="h2d", field="p_cur", unit="R0",
+                  version=3)
+    assert s.matches("h2d", "p_cur", "R0", 3)
+    assert not s.matches("d2h", "p_cur", "R0", 3)
+    assert not s.matches("h2d", "p_cur", "R0", 4)
+    w = FaultSpec(kind="transfer")
+    assert w.matches("d2h", "anything", "C9", 123)
+
+
+def test_spec_rejects_unknown_kind():
+    with pytest.raises(AssertionError):
+        FaultSpec(kind="meteor")
+
+
+# ----------------------------------------------------------------------
+# FaultPlan: deterministic, order-independent decisions
+# ----------------------------------------------------------------------
+def test_spec_decisions_bound_by_attempts():
+    plan = FaultPlan([FaultSpec(kind="transfer", unit="R0", attempts=2)])
+    assert plan.decide("h2d", "f", "R0", 0, 0) == "transfer"
+    assert plan.decide("h2d", "f", "R0", 0, 1) == "transfer"
+    assert plan.decide("h2d", "f", "R0", 0, 2) is None
+    assert plan.decide("h2d", "f", "C1", 0, 0) is None
+
+
+def test_seeded_decisions_replay_identically():
+    """Same seed -> same answers for every identity, in any order:
+    the property that lets live engine and DES share one plan."""
+    ids = [("h2d", "p_cur", f"R{i}", v, a)
+           for i in range(4) for v in range(3) for a in range(3)]
+    a = FaultPlan(seed=11, p_transfer=0.2, p_corrupt=0.2)
+    b = FaultPlan(seed=11, p_transfer=0.2, p_corrupt=0.2)
+    fwd = [a.decide(*i) for i in ids]
+    rev = [b.decide(*i) for i in reversed(ids)]
+    assert fwd == list(reversed(rev))
+    assert any(d is not None for d in fwd)  # the seed does fire
+
+
+def test_different_seeds_differ():
+    ids = [("d2h", "p_prev", f"C{i}", v, 0)
+           for i in range(8) for v in range(8)]
+    a = [FaultPlan(seed=1, p_corrupt=0.3).decide(*i) for i in ids]
+    b = [FaultPlan(seed=2, p_corrupt=0.3).decide(*i) for i in ids]
+    assert a != b
+
+
+def test_straggle_and_shard_and_crash_decisions():
+    plan = FaultPlan([
+        FaultSpec(kind="straggle", unit="C0", factor=5.0),
+        FaultSpec(kind="shard", field="p_cur", unit="R1"),
+        FaultSpec(kind="crash", sweep=2),
+    ])
+    assert plan.straggle("h2d", "f", "C0", 0) == 5.0
+    assert plan.straggle("h2d", "f", "C1", 0) == 1.0
+    assert plan.shard_fault("p_cur.R1", 0)
+    assert not plan.shard_fault("p_cur.R1", 1)  # attempts=1 default
+    assert not plan.shard_fault("p_prev.R1", 0)
+    assert plan.crash_at(2) and not plan.crash_at(1)
+
+
+def test_generate_is_deterministic_and_survivable():
+    kw = dict(fields=["p_cur", "p_prev"], units=["R0", "C0", "C1"],
+              sweeps=4)
+    a = FaultPlan.generate(3, **kw)
+    b = FaultPlan.generate(3, **kw)
+    assert a.specs == b.specs and len(a.specs) == 1
+    # every kind reachable, and transfer/corrupt stay inside the
+    # default RetryPolicy(attempts=3) budget
+    seen = set()
+    for seed in range(40):
+        (spec,) = FaultPlan.generate(seed, **kw).specs
+        seen.add(spec.kind)
+        if spec.kind in ("transfer", "corrupt"):
+            assert spec.attempts <= 2
+        if spec.kind == "crash":
+            assert 1 <= spec.sweep < 4
+    assert seen == set(FAULT_KINDS)
+
+
+# ----------------------------------------------------------------------
+# FaultInjector
+# ----------------------------------------------------------------------
+def test_injector_counts_fired_faults():
+    inj = FaultInjector(FaultPlan([
+        FaultSpec(kind="corrupt", unit="R0", attempts=1),
+    ]))
+    assert inj.transfer_fault("h2d", "f", "R0", 0, 0) == "corrupt"
+    assert inj.transfer_fault("h2d", "f", "R0", 0, 1) is None
+    assert inj.counts["corruptions"] == 1
+    assert inj.counts["transfer_faults"] == 0
+
+
+def test_crash_point_fires_once_per_injector():
+    """Rollback-and-replay must get *past* a crash point: the plan is
+    stateless but the injector remembers what already fired."""
+    inj = FaultInjector(FaultPlan([FaultSpec(kind="crash", sweep=1)]))
+    assert inj.crash_point(1)
+    assert not inj.crash_point(1)  # the replay sails through
+    assert inj.counts["crashes"] == 1
+
+
+def test_corrupt_is_deterministic_and_copies():
+    src = np.arange(64, dtype=np.uint8)
+    a = FaultInjector.corrupt(src)
+    b = FaultInjector.corrupt(src)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, src)  # one bit flipped...
+    assert (a != src).sum() == 1
+    np.testing.assert_array_equal(src, np.arange(64, dtype=np.uint8))
+
+
+def test_corrupt_empty_array_is_noop():
+    e = np.zeros(0, dtype=np.float32)
+    assert FaultInjector.corrupt(e).size == 0

@@ -42,6 +42,13 @@ GUARDED_SUFFIXES = (
     "paper_sweep_time_s",
     "overlapped_makespan_s",
     "quiesced_makespan_s",
+    # self-healing recovery (PR 7): retry/replay counts are exact
+    # functions of the injected FaultPlan and the schedule — recovery
+    # *wall* times stay unguarded like every other wall clock
+    "recovery_h2d_retries",
+    "recovery_checksum_failures",
+    "recovery_rollbacks",
+    "recovery_replayed_sweeps",
 )
 
 
