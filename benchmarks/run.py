@@ -352,6 +352,78 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
         assert_bounded_growth(curve, rel_tol)
         precision[f"code{code}"] = curve
     result["precision"] = precision
+    # multi-device sharding (PR 8): a 2-shard live run on the smoke
+    # grid — bit-identical to the single-device engine, per-device
+    # wire + compressed halo bytes recorded — plus the modeled 4-shard
+    # replay on the deeper ndiv=8 grid. Guarded: per-device/halo wire
+    # (exact functions of the graph) and the makespan *ratio* — the
+    # headline invariant, 4-shard per-sweep makespan <= 0.5x 1-shard.
+    import jax
+
+    from repro.core.pipeline import sharded_timeline
+    from repro.core.sharded import ShardedExecutor
+
+    scfg = OOCConfig(shape, ndiv, bt, paper_code_fields(1))
+    sdevs = jax.devices()[:2] if len(jax.devices()) >= 2 else None
+    sref = AsyncExecutor(scfg, p_prev, p_cur, vel2, schedule="depth2")
+    sref.run(sweeps * bt)
+    t0 = time.perf_counter()
+    seng = ShardedExecutor(
+        scfg, p_prev, p_cur, vel2, nshards=2, schedule="depth2",
+        devices=sdevs,
+    )
+    seng.run_sweeps(sweeps)
+    sh_identical = bool(np.array_equal(
+        seng.gather("p_cur"), sref.gather("p_cur")
+    ))
+    sh_wall = time.perf_counter() - t0
+    ts = seng.transfer_summary()
+    mcfg = OOCConfig((192, 16, 16), 8, bt, paper_code_fields(1))
+    msweeps = 4
+    one = sweep_timeline(
+        mcfg, V100_PCIE, sweeps=msweeps, schedule="depth2",
+    ).makespan
+    four = sharded_timeline(
+        mcfg, V100_PCIE, 4, sweeps=msweeps, schedule="depth2",
+    )
+    ratio = four.makespan / one
+    result["sharded"] = {
+        "config": {
+            "shape": shape, "ndiv": ndiv, "bt": bt, "sweeps": sweeps,
+            "nshards": 2, "devices": len(jax.devices()),
+        },
+        "wall_s": round(sh_wall, 4),
+        "bit_identical": sh_identical,
+        "halo_count": ts["halo_count"],
+        "sharded_halo_wire_per_sweep": ts["halo_wire"] // sweeps,
+        "per_device": {
+            str(d): {
+                "h2d_wire": v["h2d_wire"],
+                "d2h_wire": v["d2h_wire"],
+                "halo_wire": v["halo_wire"],
+                "halo_count": v["halo_count"],
+            }
+            for d, v in ts["per_device"].items()
+        },
+        "modeled": {
+            "config": {
+                "shape": (192, 16, 16), "ndiv": 8, "bt": bt,
+                "sweeps": msweeps, "nshards": 4,
+            },
+            "one_shard_sweep_s": round(one / msweeps, 6),
+            "sharded_modeled_sweep_s": round(
+                four.makespan / msweeps, 6
+            ),
+            "sharded_makespan_ratio": round(ratio, 4),
+            "modeled_speedup_vs_1dev": round(1.0 / ratio, 3),
+            "modeled_halo_wire": four.transfer_wire()["halo_wire"],
+        },
+    }
+    # invariant 7 (PR 8): the sharded run reproduces the single-device
+    # bits and the modeled 4-shard per-sweep makespan is at most half
+    # the 1-shard one on the deep smoke grid
+    assert sh_identical, result["sharded"]
+    assert ratio <= 0.5, result["sharded"]
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
     print(f"# wrote {out_path}", file=sys.stderr)

@@ -211,6 +211,30 @@ class ShardWriter:
         self._manifest["leaves"][key] = entry
         return len(blob)
 
+    def add_external(
+        self, key: str, entry: Dict[str, Any], source_dir: str,
+    ) -> int:
+        """Record a leaf that already lives, byte-identical, in a
+        previous published checkpoint instead of rewriting it — the
+        incremental/differential snapshot path: a unit whose version
+        did not move since the last cut keeps its old shard file.
+
+        ``entry`` is the previous manifest's entry for ``key`` and
+        ``source_dir`` that checkpoint's directory name (e.g.
+        ``step_0000000004``). The recorded entry points at the
+        *original* directory (chains flatten: an entry that was itself
+        external keeps its original ``dir``), so any retained
+        checkpoint needs only one hop to every shard, and the
+        reference-aware gc keeps source directories alive for as long
+        as any retained manifest points into them. Returns 0 (no bytes
+        written).
+        """
+        assert not self._finalized, "writer already finalized"
+        new = dict(entry)
+        new["dir"] = entry.get("dir", source_dir)
+        self._manifest["leaves"][key] = new
+        return 0
+
     def finalize(self, keep: int = 3) -> str:
         """Write the manifest, publish ``step_<k>`` atomically, gc.
 
@@ -313,9 +337,25 @@ def _fsync_dir(path: pathlib.Path) -> None:
 
 
 def _gc(base: pathlib.Path, keep: int) -> None:
+    """Drop all but the last ``keep`` checkpoints — except directories
+    an incremental chain still points into: a retained manifest's
+    external (``dir``) references pin their source checkpoints, so
+    restoring any kept cut never chases a deleted shard."""
     ckpts = sorted(p for p in base.iterdir() if p.name.startswith("step_"))
-    for p in ckpts[:-keep]:
-        shutil.rmtree(p)
+    retained = ckpts[-keep:] if keep > 0 else []
+    referenced = {p.name for p in retained}
+    for p in retained:
+        try:
+            manifest = json.loads((p / "manifest.json").read_text())
+        except (OSError, ValueError):  # unreadable: nothing to pin
+            continue
+        for entry in manifest.get("leaves", {}).values():
+            d = entry.get("dir")
+            if d:
+                referenced.add(d)
+    for p in ckpts[:-keep] if keep > 0 else ckpts:
+        if p.name not in referenced:
+            shutil.rmtree(p)
 
 
 def latest(directory: str) -> Optional[str]:
@@ -349,7 +389,10 @@ def read_manifest(path: str) -> Dict[str, Any]:
 
 
 def _decode_leaf(p: pathlib.Path, entry: Dict[str, Any]) -> np.ndarray:
-    blob = (p / entry["file"]).read_bytes()
+    # an external (incremental) entry lives in a sibling checkpoint
+    # directory under the same root; its crc32 still guards the bytes
+    src = p if "dir" not in entry else p.parent / entry["dir"]
+    blob = (src / entry["file"]).read_bytes()
     want = entry.get("crc32")  # absent in pre-PR 7 checkpoints
     if want is not None:
         got = zlib.crc32(blob) & 0xFFFFFFFF

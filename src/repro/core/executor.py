@@ -128,6 +128,7 @@ from repro.distributed.fault import (
     RetryPolicy,
     UnrecoverableFault,
 )
+from repro.distributed.sharding import ShardSpec
 from repro.kernels.stencil import ops as stencil_ops
 from repro.kernels.zfp import ops as zfp_ops
 from repro.kernels.zfp.ref import Compressed
@@ -273,6 +274,7 @@ class AsyncExecutor:
         reissue: Optional[ReissuePolicy] = None,
         retry: Optional[RetryPolicy] = None,
         injector: Optional[FaultInjector] = None,
+        shard: Optional["ShardSpec"] = None,
     ):
         """Build a live executor over ``cfg``.
 
@@ -315,6 +317,17 @@ class AsyncExecutor:
             shard write, and sweep boundary (crash points). The same
             plan drives ``pipeline.simulate(..., faults=plan)`` for
             model/live attempt-multiset parity.
+        shard:
+            Optional ``repro.distributed.sharding.ShardSpec``
+            restricting this executor to one contiguous global block
+            range of a multi-device decomposition. The plan stays
+            global (tids, spans, versions line up with the
+            single-device engine); the store seeds only the local
+            unit footprint; the sweep loop walks the local blocks,
+            importing the left neighbor's held slice
+            (``deliver_held``) and exporting the boundary payloads a
+            ``repro.core.sharded.ShardedExecutor`` routes between
+            shards.
         """
         self.cfg = cfg
         self.schedule = get_schedule(schedule)
@@ -333,6 +346,13 @@ class AsyncExecutor:
         self.reissue = reissue if reissue is not None else retry
         self.retry = retry if retry is not None else reissue
         self.injector = injector
+        self.shard = shard
+        # local block range (global indices); the whole domain when
+        # running single-device
+        self._blocks: List[int] = (
+            list(shard.blocks) if shard is not None
+            else list(range(self.plan.ndiv))
+        )
         self.cache = DeviceResidencyManager(cache_bytes, policy=policy)
         self.store = HostUnitStore(
             cfg, plan=self.plan, injector=injector, retry=self.retry,
@@ -344,7 +364,8 @@ class AsyncExecutor:
                 "seed all three fields or none"
             )
             self.store.seed(
-                {"p_prev": p_prev, "p_cur": p_cur, "vel2": vel2}
+                {"p_prev": p_prev, "p_cur": p_cur, "vel2": vel2},
+                keys=self._local_units() if shard is not None else None,
             )
         self.recovery_log: List[Dict[str, object]] = []
         # monotonic clock for flush straggler detection; swappable in
@@ -354,14 +375,25 @@ class AsyncExecutor:
         self.transfers: List[Transfer] = []
         self.sweeps_done = 0
         self.max_inflight = 0  # peak block visits with pending D2H
-        # the graph depends only on (cfg, schedule), both immutable:
-        # build the cache-free single-sweep template once and replay it
-        # every sweep (cache hits are a live decision per fetch)
+        # the graph depends only on (cfg, schedule, shard), all
+        # immutable: build the cache-free single-sweep template once
+        # and replay it every sweep (cache hits are a live decision
+        # per fetch); sharded templates carry the boundary fetch and
+        # the kind-"halo" export tasks
         self._by_block: List[List[Task]] = [
-            [] for _ in range(self.plan.ndiv)
+            [] for _ in self._blocks
         ]
-        for t in build_sweep_tasks(cfg, sweeps=1, schedule=self.schedule):
-            self._by_block[t.block].append(t)
+        for t in build_sweep_tasks(
+            cfg, sweeps=1, schedule=self.schedule, shard=shard,
+        ):
+            self._by_block[t.block - self._blocks[0]].append(t)
+
+        # halo exchange state (sharded only): the left neighbor's held
+        # slices for this round, and the boundary payloads this shard
+        # exports (the coordinator routes both)
+        self._held_in: Dict[str, jax.Array] = {}
+        self._held_out: Dict[str, jax.Array] = {}
+        self._halo_out: Dict[UnitKey, Tuple[object, int]] = {}
 
         # live state
         self._dev: Dict[UnitKey, jax.Array] = {}
@@ -393,7 +425,55 @@ class AsyncExecutor:
         self.ckpt_stats: Dict[str, object] = {
             "snapshots": 0, "overlapped": 0, "quiesced": 0,
             "boundary_block_s": 0.0, "drain_s": 0.0, "shard_bytes": 0,
+            "units_reused": 0,
         }
+
+    # ------------------------------------------------------------------
+    # halo exchange (sharded executors; routed by ShardedExecutor)
+    # ------------------------------------------------------------------
+    def _local_units(self) -> List[Tuple[str, int]]:
+        """The shard's unit footprint: everything its blocks fetch or
+        write, plus the left common its first block assembles from the
+        store (the on-device carry a single-device run would hold)."""
+        keys = set()
+        for i in self._blocks:
+            keys.update(self.plan.fetch_units(i))
+            keys.update(self.plan.writeback_units(i))
+        if self._blocks[0] > 0:
+            keys.add(("C", self._blocks[0] - 1))
+        return sorted(keys)
+
+    def deliver_held(self, name: str, value: jax.Array) -> None:
+        """Accept the left neighbor's held slice (the new-time lower
+        half of the boundary common) for the coming round. Must land
+        before ``sweep()`` — its first writeback concatenates it."""
+        self._held_in[name] = value
+
+    def take_held(self) -> Dict[str, jax.Array]:
+        """Pop the held slices this shard exports after a round (empty
+        for the last shard)."""
+        out, self._held_out = self._held_out, {}
+        return out
+
+    def take_halo(self) -> Dict[UnitKey, Tuple[object, int]]:
+        """Pop the encoded boundary-common payloads this shard exports
+        after a round: ``{(field, unit): (payload, version)}`` (empty
+        for the first shard)."""
+        out, self._halo_out = self._halo_out, {}
+        return out
+
+    def deliver_halo(
+        self, field: str, kind: str, idx: int, value, version: int,
+    ) -> int:
+        """Land a neighbor's halo put in this shard's ghost mirror.
+        The crossing goes through the host store as op ``"halo"`` —
+        integrity-checked, retried, and wire-logged like any other
+        link crossing. Returns wire bytes."""
+        wire = self.store.put(
+            field, kind, idx, value, version=version, op="halo",
+        )
+        self._ver[(field, (kind, idx))] = version
+        return wire
 
     # ------------------------------------------------------------------
     # window management
@@ -505,7 +585,17 @@ class AsyncExecutor:
         zeros = lambda n: jnp.zeros(
             (n, y, x), dtype=jnp.dtype(self.cfg.dtype)
         )
-        pieces = [shared if i > 0 else zeros(h)]
+        if i == 0:
+            first = zeros(h)
+        elif shared is not None:
+            first = shared
+        else:
+            # sharded first local block: the left common was fetched
+            # (and decompressed) from this shard's own store — the
+            # decode of the unit it committed last round, bit-equal to
+            # the carry a single-device run keeps on device
+            first = self._dev.pop((name, ("C", i - 1)))
+        pieces = [first]
         pieces += [self._dev.pop((name, u)) for u in plan.fetch_units(i)]
         if i == plan.ndiv - 1:
             pieces.append(zeros(h))
@@ -642,12 +732,19 @@ class AsyncExecutor:
         kr = self.temporal if sweeps is None else sweeps
         assert 1 <= kr <= self.temporal, (kr, self.temporal)
         plan = self.plan
+        rw = [n for n, sp in self.cfg.fields.items() if sp.role == "rw"]
         held: Dict[str, jax.Array] = {}
+        if self.shard is not None and not self.shard.first:
+            # the left neighbor's held slices seed the boundary
+            # writeback concat exactly as block lo-1's visit would
+            lo = self._blocks[0]
+            for n in rw:
+                held[n + str(lo - 1)] = self._held_in.pop(n)
         shared: Dict[str, Optional[jax.Array]] = {
             n: None for n in self.cfg.fields
         }
-        for i in range(plan.ndiv):
-            btasks = self._by_block[i]
+        for j, i in enumerate(self._blocks):
+            btasks = self._by_block[j]
             # window admission precedes this visit's first transfer
             self._admit()
             # one chunk of an in-flight overlapped snapshot drains
@@ -664,7 +761,20 @@ class AsyncExecutor:
             self._exec_compress(
                 [t for t in btasks if t.kind == "compress"]
             )
+            # capture the boundary-common export BEFORE parking pops
+            # the payload: the halo ships the same encoded object the
+            # writeback commits, at the version the park will issue
+            for t in btasks:
+                if t.kind == "halo" and ".halo." in t.tid:
+                    key = (t.field, t.unit)
+                    self._halo_out[key] = (
+                        self._outvals[key],
+                        self._ver.get(key, 0) + kr,
+                    )
             self._park_writebacks(btasks, kr)
+        if self.shard is not None and not self.shard.last:
+            last = self._blocks[-1]
+            self._held_out = {n: held[n + str(last)] for n in rw}
         assert not self._dev and not self._staged and not self._outvals
         self.sweeps_done += kr
 
@@ -920,6 +1030,12 @@ class AsyncExecutor:
                 "depth": self.depth,
                 "cache_bytes": self.cache.budget_bytes,
                 "policy": self.cache.policy,
+                # sharded layout (None single-device); device pins are
+                # process state and never persist
+                "shard": (
+                    self.shard.to_dict()
+                    if self.shard is not None else None
+                ),
             },
         }
 
@@ -1129,6 +1245,7 @@ class AsyncExecutor:
         zstd_level: Optional[int] = None,
         lossy_planes: Optional[int] = None,
         keep: int = 3,
+        incremental: bool = False,
     ) -> str:
         """Crash-consistent snapshot of the in-flight run — one call.
 
@@ -1153,22 +1270,71 @@ class AsyncExecutor:
         where ``k`` is the sweep index). ``AsyncExecutor.restore``
         rebuilds a live executor from it that resumes bit-identically
         to an uninterrupted run.
+
+        With ``incremental=True`` (differential snapshot) units whose
+        committed version did not move since the previous cut in
+        ``directory`` are not re-encoded or rewritten: their manifest
+        entries point back (via an external ``dir`` reference, chains
+        flattened to the original writer) at the earlier checkpoint's
+        shard files, and the reference-aware gc keeps those source
+        directories alive while any retained manifest needs them. The
+        restored state is identical either way; only write volume
+        changes — ``ckpt_stats["units_reused"]`` counts the skips.
         """
         self.finish()
         self.flush()
         leaves, store_meta = self.store.state_dict()
         extra = self._progress_extra()
         extra["store"] = store_meta
-        path = ckpt.save(
-            directory, self.sweeps_done, leaves,
-            zstd_level=zstd_level, lossy_planes=lossy_planes,
-            keep=keep, extra=extra,
+        prev_leaves: Dict[str, Dict[str, object]] = {}
+        prev_units: Dict[str, Dict[str, object]] = {}
+        prev_dir = None
+        if incremental:
+            found = ckpt.latest(directory)
+            if found is not None:
+                try:
+                    prev = ckpt.read_manifest(found)
+                except Exception:
+                    prev = None  # unreadable previous cut: full snapshot
+                if prev is not None:
+                    prev_dir = pathlib.Path(found).name
+                    prev_leaves = prev.get("leaves", {})
+                    prev_units = (
+                        prev.get("extra", {}).get("store", {})
+                        .get("units", {})
+                    )
+        unchanged = {
+            ukey for ukey, u in store_meta["units"].items()
+            if ukey in prev_units
+            and int(prev_units[ukey]["version"]) == int(u["version"])
+        }
+        w = ckpt.ShardWriter(
+            directory, self.sweeps_done, zstd_level=zstd_level,
+            lossy_planes=lossy_planes, extra=extra,
             injector=self.injector, retry=self.retry,
             stats=self.cache.stats,
         )
+        reused = 0
+        try:
+            for key, leaf in leaves.items():
+                ukey = key
+                for suf in (".payload", ".emax"):
+                    if key.endswith(suf):
+                        ukey = key[: -len(suf)]
+                ent = prev_leaves.get(key)
+                if ukey in unchanged and ent is not None:
+                    w.add_external(key, ent, prev_dir)
+                    reused += 1
+                else:
+                    w.add(key, leaf)
+        except BaseException:
+            w.abort()
+            raise
+        path = w.finalize(keep=keep)
         self.last_checkpoint_path = path
         self.ckpt_stats["snapshots"] += 1
         self.ckpt_stats["quiesced"] += 1
+        self.ckpt_stats["units_reused"] += reused
         return path
 
     @classmethod
@@ -1182,6 +1348,7 @@ class AsyncExecutor:
         reissue: Optional[ReissuePolicy] = None,
         retry: Optional[RetryPolicy] = None,
         injector: Optional[FaultInjector] = None,
+        device=None,
     ) -> "AsyncExecutor":
         """Rebuild a live executor from ``checkpoint()`` state.
 
@@ -1198,7 +1365,9 @@ class AsyncExecutor:
         ``schedule``/``cache_bytes``/``policy`` default to the values
         the checkpoint recorded; pass overrides to resume under a
         different execution strategy (allowed because none of them
-        affect numerics).
+        affect numerics). A sharded executor's layout restores from
+        the manifest; ``device`` optionally re-pins it (device pins
+        are process state and never persist).
         """
         path = pathlib.Path(directory)
         if not (path / "manifest.json").exists():
@@ -1227,6 +1396,7 @@ class AsyncExecutor:
                     window=spec["window"],
                     temporal=spec.get("temporal", 1),
                 )
+        shard_d = prog.get("shard")
         ex = cls(
             OOCConfig.from_dict(extra["cfg"]),
             schedule=schedule,
@@ -1236,6 +1406,10 @@ class AsyncExecutor:
             ),
             policy=prog["policy"] if policy is None else policy,
             reissue=reissue, retry=retry, injector=injector,
+            shard=(
+                ShardSpec.from_dict(shard_d, device=device)
+                if shard_d else None
+            ),
         )
         ex.store.load_state(leaves, extra["store"])
         ex.sweeps_done = int(prog["sweeps_done"])

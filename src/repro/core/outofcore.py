@@ -47,7 +47,7 @@ from __future__ import annotations
 import zlib
 from collections import Counter
 from dataclasses import dataclass
-from typing import Dict, List, Literal, Optional, Tuple
+from typing import Dict, List, Literal, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -394,6 +394,7 @@ class HostUnitStore:
         self, field: str, kind: str, idx: int, value,
         version: Optional[int] = None,
         on_wire: bool = True,
+        op: str = "d2h",
     ) -> int:
         """Store; returns wire bytes (what crossed the link).
 
@@ -406,6 +407,10 @@ class HostUnitStore:
         and transfer failures retry under the store's ``RetryPolicy``).
         ``on_wire=False`` marks a host-local put (seeding) that never
         crosses the link — exempt from injection, but still digested.
+        ``op`` labels the crossing in the wire log (and for fault
+        injection): ``"d2h"`` for the device->host link, ``"halo"``
+        for an inter-device halo put landing in a neighbor shard's
+        ghost mirror.
         """
         key = (field, kind, idx)
         if version is None:
@@ -423,7 +428,7 @@ class HostUnitStore:
             wire = host.nbytes
         crc = unit_checksum(host, version)
         if on_wire:
-            host = self._wire("d2h", field, kind, idx, version, host, crc)
+            host = self._wire(op, field, kind, idx, version, host, crc)
         # store the payload BEFORE advancing the version maps: a put
         # that fails mid-copy must not leave host_current() true over
         # stale bytes (the flush-retry contract relies on this order)
@@ -572,17 +577,29 @@ class HostUnitStore:
             self._versions[key] = ver
             self._host_versions[key] = ver
 
-    def seed(self, full: Dict[str, np.ndarray]) -> None:
+    def seed(
+        self,
+        full: Dict[str, np.ndarray],
+        keys: Optional[Sequence[Tuple[str, int]]] = None,
+    ) -> None:
         """Initial decomposition of full fields into host units.
         (In production this is the I/O layer; unit-wise so the full
-        volume never has to exist on the device.)"""
+        volume never has to exist on the device.)
+
+        ``keys`` restricts seeding to the given ``(kind, idx)`` units —
+        a shard's local footprint. Compression is per-unit and
+        deterministic, so a subset seed holds bit-identical payloads to
+        the same units of a full seed.
+        """
         cfg = self.cfg
         plan = self.plan
+        keep = None if keys is None else set(keys)
         for name, arr in full.items():
             spec = cfg.fields[name]
             assert arr.shape == cfg.shape
             units = [(kind, idx, jnp.asarray(arr[lo:hi]))
-                     for kind, idx, (lo, hi) in plan.units()]
+                     for kind, idx, (lo, hi) in plan.units()
+                     if keep is None or (kind, idx) in keep]
             if spec.compressed:
                 comp = zfp_ops.compress_units(
                     [u for _, _, u in units], planes=spec.planes, ndim=3,

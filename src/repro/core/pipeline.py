@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Tuple, Union
 from repro.core.taskgraph import (  # noqa: F401  (re-exported API)
     Schedule,
     Task,
+    build_sharded_tasks,
     build_sweep_tasks,
     get_schedule,
 )
@@ -57,6 +58,11 @@ class Hardware:
     # "unidentified overheads" of §VI-B. The fused single-pass Pallas
     # codec (``unitgrain``/``overlap`` schedules) does not pay it.
     codec_sync_overhead: float = 8e-3
+    # inter-device link bandwidth (B/s) for sharded halo exchange
+    # (PR 8). ``None`` prices halo tasks at ``d2h_bw`` — a host-staged
+    # exchange; set higher (e.g. NVLink/ICI-class) to model a direct
+    # device-to-device fabric.
+    halo_bw: Optional[float] = None
 
 
 # The paper's testbed: Tesla V100-PCIe 32GB, PCIe 3.0 x16 (Table II).
@@ -169,7 +175,14 @@ class Timeline:
         engine and this replay must produce the same multiset."""
         out: Counter = Counter()
         for t in self.tasks.values():
-            if t.kind in ("h2d", "d2h") and t.unit is not None:
+            if t.unit is None:
+                continue
+            if t.kind in ("h2d", "d2h") or (
+                t.kind == "halo" and ".halo." in t.tid
+            ):
+                # unit-halo puts route through the importer's store
+                # wire loop like any d2h; held slices do not (they are
+                # a direct device exchange, never a store op)
                 out[(
                     t.kind, t.field, f"{t.unit[0]}{t.unit[1]}",
                     int(t.version),
@@ -189,9 +202,10 @@ class Timeline:
         out = {
             "h2d_wire": 0.0, "d2h_wire": 0.0,
             "d2h_flush_wire": 0.0, "d2h_ckpt_wire": 0.0,
+            "halo_wire": 0.0,
         }
         for t in self.tasks.values():
-            if t.kind not in ("h2d", "d2h"):
+            if t.kind not in ("h2d", "d2h", "halo"):
                 continue
             out[f"{t.kind}_wire"] += t.amount
             if t.flush:
@@ -213,6 +227,8 @@ def _duration(task: Task, hw: Hardware) -> float:
         return task.amount / hw.compress_bw + extra
     if task.kind == "stencil":
         return task.amount / hw.stencil_pts_per_s + extra
+    if task.kind == "halo":
+        return task.amount / (hw.halo_bw or hw.d2h_bw) + extra
     raise ValueError(task.kind)
 
 
@@ -266,8 +282,11 @@ def simulate(tasks: List[Task], hw: Hardware,
                     dur *= slow
         injected = (
             faults is not None
-            and t.kind in ("h2d", "d2h")
             and t.unit is not None
+            and (
+                t.kind in ("h2d", "d2h")
+                or (t.kind == "halo" and ".halo." in t.tid)
+            )
         )
         if injected:
             unitlabel = f"{t.unit[0]}{t.unit[1]}"
@@ -378,4 +397,38 @@ def sweep_timeline(
             cache_bytes=cache_bytes, stats=stats, policy=policy,
             ckpt_every=ckpt_every, ckpt_mode=ckpt_mode,
         ), hw, reissue=reissue, retry=retry, faults=faults,
+    )
+
+
+def sharded_timeline(
+    cfg, hw: Hardware, nshards: int, sweeps: int = 1,
+    schedule: Union[str, Schedule] = "depth2",
+    cache_bytes: int = 0,
+    stats: Optional[Dict[str, object]] = None,
+    policy: str = "write-back",
+    faults: Optional[FaultPlan] = None,
+    retry: Optional[RetryPolicy] = None,
+) -> Timeline:
+    """Replay a ``nshards``-device sharded run (PR 8) on the DES.
+
+    Each shard owns a private three-stream pipeline — resources are
+    namespaced ``s{d}:h2d`` / ``s{d}:compute`` / ``s{d}:d2h`` /
+    ``s{d}:halo`` — so shards advance concurrently and the per-sweep
+    makespan drops toward ``1/nshards`` of ``sweep_timeline``'s. The
+    inter-device links carry the two halo flows per internal boundary
+    per rw field per round: the raw held slices (left -> right,
+    hazard-edged against the boundary-common writeback chain only, so
+    the downstream shard's interior work pipelines past the wait) and
+    the ZFP-encoded boundary-common unit (right -> left, priced at the
+    encoded wire size ``exact_nbytes`` — the same bytes the live
+    ``ShardedExecutor`` ships). ``stats["per_device"]`` receives each
+    shard's modeled residency counters; transfer parity with the live
+    engine holds transfer-for-transfer at every ``cache_bytes`` budget
+    (tests/test_sharded.py).
+    """
+    return simulate(
+        build_sharded_tasks(
+            cfg, nshards, sweeps=sweeps, schedule=schedule,
+            cache_bytes=cache_bytes, stats=stats, policy=policy,
+        ), hw, retry=retry, faults=faults,
     )

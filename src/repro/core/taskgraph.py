@@ -72,7 +72,7 @@ from repro.kernels.zfp import ref as zfp_ref
 class Transfer:
     """One realized host<->device transfer (the engines' audit log)."""
 
-    direction: str  # "h2d" | "d2h"
+    direction: str  # "h2d" | "d2h" | "halo"
     field: str
     unit: Tuple[str, int]
     raw_bytes: int
@@ -103,8 +103,9 @@ def summarize_transfers(transfers: List[Transfer]) -> Dict[str, int]:
     """
     tot = {
         "h2d_raw": 0, "h2d_wire": 0, "d2h_raw": 0, "d2h_wire": 0,
+        "halo_raw": 0, "halo_wire": 0,
         "d2h_flush_wire": 0, "d2h_ckpt_wire": 0,
-        "h2d_count": 0, "d2h_count": 0,
+        "h2d_count": 0, "d2h_count": 0, "halo_count": 0,
     }
     for t in transfers:
         tot[f"{t.direction}_raw"] += t.raw_bytes
@@ -244,6 +245,8 @@ def build_sweep_tasks(
     policy: str = "write-back",
     ckpt_every: int = 0,
     ckpt_mode: str = "overlapped",
+    shard=None,
+    resource_prefix: str = "",
 ) -> List[Task]:
     """Tasks for ``sweeps`` consecutive sweeps of the out-of-core engine,
     mirroring the engines' fetch/compute/writeback structure (units
@@ -301,6 +304,38 @@ def build_sweep_tasks(
     tasks, entries marked clean) and the next sweep's first visit
     gets barrier edges on the cut — the drain the overlapped cut
     exists to avoid.
+
+    ``shard`` (a ``repro.distributed.sharding.ShardSpec``) restricts
+    the graph to that shard's contiguous global block range and adds
+    the halo-exchange tasks of the multi-device decomposition — the
+    plan stays *global*, so tids, unit spans, and versions line up
+    with the single-device graph:
+
+    * the first local block (when not the domain edge) additionally
+      **fetches** its left common ``C_{lo-1}`` — the region a
+      single-device run carries on device from the previous visit;
+      the shard owns and re-commits that unit every round, so the
+      fetch replays through the residency manager like any other;
+    * after the first local block's writeback, a kind-``halo`` task on
+      the ``halo`` resource exports the committed ``C_{lo-1}`` unit to
+      the *left* neighbor's ghost — the payload ships **encoded** (the
+      exact ``Compressed.nbytes()`` for ZFP fields), hazard-edged on
+      the producing codec task and stamped with the version the
+      writeback produced;
+    * after the last local block's stencil (when not the domain edge),
+      a kind-``halo`` task exports the *held* lower half of
+      ``C_{hi-1}`` (``halo`` raw planes, the new-time slice the right
+      neighbor's first writeback concatenates) to the right neighbor;
+    * the right-boundary ghost ``C_{hi-1}``'s version advances ``kr``
+      per round (the neighbor's halo put), so fetch versions match the
+      live engine; the ghost is read-write-role but never written
+      locally, hence never cached — its h2d is always emitted, which
+      is the anchor ``build_sharded_tasks`` hangs the cross-shard
+      hazard edge on.
+
+    ``resource_prefix`` namespaces every task's resource (e.g.
+    ``"s1:"`` makes ``s1:h2d``/``s1:compute``/...), giving each shard
+    its own stream set in a merged multi-device replay.
     """
     if ckpt_mode not in ("overlapped", "quiesced"):
         raise ValueError(
@@ -327,7 +362,8 @@ def build_sweep_tasks(
             field="", unit=None, sweep=0, ver=0, flush=False,
             ckpt=False):
         tasks.append(Task(
-            tid, resource, kind, amount, tuple(deps), block,
+            tid, resource_prefix + resource, kind, amount, tuple(deps),
+            block,
             sync=sync and sched.codec_sync, field=field, unit=unit,
             sweep=sweep, version=ver, flush=flush, ckpt=ckpt,
         ))
@@ -414,9 +450,14 @@ def build_sweep_tasks(
         kr = min(sched.temporal, sweeps - s0)
         rounds.append((s0, kr))
         s0 += kr
+    # shard-local block range; visits (for window edges) count *local*
+    # visits, matching the per-shard executor's own in-flight window
+    blocks = list(shard.blocks) if shard is not None else list(
+        range(plan.ndiv)
+    )
     for rnd, (s, kr) in enumerate(rounds):
-        for i in range(plan.ndiv):
-            visit = rnd * plan.ndiv + i
+        for j, i in enumerate(blocks):
+            visit = rnd * len(blocks) + j
             pre = f"s{s}b{i}"
             window_dep: Tuple[str, ...] = ()
             if sched.window is not None and visit >= sched.window:
@@ -435,8 +476,13 @@ def build_sweep_tasks(
                 barrier_dep = ()
             h2d_ids, dec_ids = [], []
             fetch_flushes: List[str] = []
+            funits = list(plan.fetch_units(i))
+            if shard is not None and i == shard.block_lo and i > 0:
+                # first local block: fetch the left common that a
+                # single-device run would carry on device
+                funits.insert(0, ("C", i - 1))
             for name, spec in cfg.fields.items():
-                for kind, idx in plan.fetch_units(i):
+                for kind, idx in funits:
                     key = (name, (kind, idx))
                     ver = version.get(key, 0)
                     raw = unit_planes(kind, idx) * plane_bytes
@@ -498,6 +544,21 @@ def build_sweep_tasks(
                 f"{pre}.stencil", "compute", "stencil", cells, deps, i,
                 sweep=s,
             )
+            if (shard is not None and i == shard.block_hi - 1
+                    and not shard.last):
+                # export the held new-time lower half of C_{hi-1} to
+                # the right neighbor's first writeback; ships raw (the
+                # neighbor's concat input must stay bit-exact)
+                for name, spec in cfg.fields.items():
+                    if spec.role != "rw":
+                        continue
+                    gkey = (name, ("C", i))
+                    add(
+                        f"{pre}.held.{name}.C{i}", "halo", "halo",
+                        plan.halo * plane_bytes, (prev_compute,), i,
+                        field=name, unit=("C", i), sweep=s,
+                        ver=version.get(gkey, 0) + kr,
+                    )
             last_d2h = fetch_flushes[-1] if fetch_flushes else prev_compute
             for name, spec in cfg.fields.items():
                 if spec.role != "rw":
@@ -518,6 +579,20 @@ def build_sweep_tasks(
                             field=name, unit=(kind, idx), sweep=s,
                             ver=ver,
                         ),)
+                    if (shard is not None and kind == "C"
+                            and idx == shard.block_lo - 1):
+                        # ship the committed left common to the left
+                        # neighbor's ghost — the *encoded* payload
+                        # (exact ZFP nbytes), hazard-edged on the
+                        # producing codec task, independent of the d2h
+                        # (which residency may elide entirely)
+                        add(
+                            f"{pre}.halo.{name}.{kind}{idx}", "halo",
+                            "halo", exact_nbytes(spec, kind, idx),
+                            dep, i,
+                            field=name, unit=(kind, idx), sweep=s,
+                            ver=ver,
+                        )
                     if cache.enabled:
                         # deposited before (independent of) the host
                         # materialization — the next sweep can hit even
@@ -546,6 +621,14 @@ def build_sweep_tasks(
                     )
                     writeback_of[key] = last_d2h
             drain_of_visit[visit] = last_d2h
+        if shard is not None and not shard.last:
+            # the right neighbor's halo put lands at the round
+            # boundary: the ghost common's version advances kr per
+            # round, so next round's fetch reads the refreshed mirror
+            for name, spec in cfg.fields.items():
+                if spec.role == "rw":
+                    gkey = (name, ("C", shard.block_hi - 1))
+                    version[gkey] = version.get(gkey, 0) + kr
         if ckpt_every and (s + kr) % ckpt_every == 0:
             # the checkpoint cut at this sweep boundary, at the frozen
             # version vector (every version this sweep issued)
@@ -597,10 +680,87 @@ def build_sweep_tasks(
     return tasks
 
 
+def build_sharded_tasks(
+    cfg,
+    nshards: int,
+    sweeps: int = 1,
+    schedule: Union[str, Schedule] = "unitgrain",
+    cache_bytes: int = 0,
+    stats: Optional[Dict[str, object]] = None,
+    policy: str = "write-back",
+) -> List[Task]:
+    """Merged multi-device task graph: one per-shard graph per device
+    (resources namespaced ``s{d}:h2d``/``s{d}:compute``/... so each
+    shard replays on its own stream set) plus the cross-shard hazard
+    edges of the halo exchange:
+
+    * **held** (shard *d*, round *r*) → the right neighbor's boundary
+      writeback chain in the *same* round — its compress task when the
+      field is compressed, else its d2h, else its own halo export.
+      Deliberately *not* into the neighbor's stencil: only the
+      boundary common's commit waits on the import, so shards pipeline
+      as a wavefront and the per-sweep makespan drops toward 1/N;
+    * **unit halo** (shard *d+1*, round *r*) → shard *d*'s ghost
+      refetch in the *next* round (the fetch-after-halo-put hazard;
+      the ghost is never resident, so that h2d task always exists).
+
+    The merge is round-major (shard-ascending within a round), keeping
+    the list in dependency order for the replay. ``stats`` (if given)
+    gains a ``"per_device"`` dict of each shard's residency counters.
+    """
+    from repro.distributed.sharding import partition_domain
+
+    sched = get_schedule(schedule)
+    specs = partition_domain(cfg.ndiv, nshards)
+    rounds: List[Tuple[int, int]] = []
+    s0 = 0
+    while s0 < sweeps:
+        kr = min(sched.temporal, sweeps - s0)
+        rounds.append((s0, kr))
+        s0 += kr
+    per_shard: List[List[Task]] = []
+    for spec in specs:
+        st: Dict[str, object] = {}
+        per_shard.append(build_sweep_tasks(
+            cfg, sweeps, sched, cache_bytes, st, policy,
+            shard=spec, resource_prefix=f"s{spec.index}:",
+        ))
+        if stats is not None:
+            stats.setdefault("per_device", {})[spec.index] = st
+    merged: List[Task] = []
+    for s, _ in rounds:
+        for tl in per_shard:
+            merged.extend(t for t in tl if t.sweep == s)
+    by_tid = {t.tid: t for t in merged}
+    rw = [n for n, sp in cfg.fields.items() if sp.role == "rw"]
+    for r, (s, kr) in enumerate(rounds):
+        for spec in specs[:-1]:
+            hi = spec.block_hi
+            for name in rw:
+                held = f"s{s}b{hi - 1}.held.{name}.C{hi - 1}"
+                for cand in (f"s{s}b{hi}.comp.{name}.C{hi - 1}",
+                             f"s{s}b{hi}.d2h.{name}.C{hi - 1}",
+                             f"s{s}b{hi}.halo.{name}.C{hi - 1}"):
+                    tgt = by_tid.get(cand)
+                    if tgt is not None:
+                        tgt.deps = tgt.deps + (held,)
+                        break
+                if r + 1 < len(rounds):
+                    ns = rounds[r + 1][0]
+                    halo = f"s{s}b{hi}.halo.{name}.C{hi - 1}"
+                    tgt = by_tid.get(
+                        f"s{ns}b{hi - 1}.h2d.{name}.C{hi - 1}"
+                    )
+                    if tgt is not None and halo in by_tid:
+                        tgt.deps = tgt.deps + (halo,)
+    return merged
+
+
 def wire_totals(tasks: List[Task]) -> Dict[str, float]:
     """Modeled wire bytes per link direction (h2d/d2h task amounts;
-    residency flushes are d2h tasks and count toward d2h)."""
-    out = {"h2d": 0.0, "d2h": 0.0}
+    residency flushes are d2h tasks and count toward d2h; halo tasks
+    are the inter-device links of a sharded graph)."""
+    out = {"h2d": 0.0, "d2h": 0.0, "halo": 0.0}
     for t in tasks:
         if t.kind in out:
             out[t.kind] += t.amount

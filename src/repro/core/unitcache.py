@@ -127,6 +127,12 @@ class CacheStats:
     shard_retries: int = 0  # checkpoint shard writes retried
     recoveries: int = 0  # rollback-and-replay cycles taken by run()
     replayed_sweeps: int = 0  # sweeps re-executed after rollbacks
+    # multi-device halo exchange (PR 8): inter-device crossings this
+    # shard *exported* (held slices + encoded boundary commons), kept
+    # separate from h2d/d2h so bench rows and parity tests can assert
+    # halo traffic on its own
+    halo_count: int = 0  # halo payloads shipped to a neighbor shard
+    halo_wire_bytes: int = 0  # link bytes those halo crossings paid
 
     @property
     def lookups(self) -> int:
@@ -166,6 +172,8 @@ class CacheStats:
             "shard_retries": self.shard_retries,
             "recoveries": self.recoveries,
             "replayed_sweeps": self.replayed_sweeps,
+            "halo_count": self.halo_count,
+            "halo_wire_bytes": self.halo_wire_bytes,
             "hit_rate": self.hit_rate,
         }
 

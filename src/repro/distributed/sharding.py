@@ -1,4 +1,5 @@
-"""Logical-axis sharding rules (MaxText-style).
+"""Logical-axis sharding rules (MaxText-style) + the out-of-core
+domain partitioner.
 
 Model code annotates tensors with *logical* axis names; a rules table
 maps logical names to mesh axes. Swapping the table re-shards the whole
@@ -6,13 +7,25 @@ model — that is the knob the §Perf hillclimb turns.
 
 Outside a mesh context every annotation is a no-op, so the same model
 code runs single-device smoke tests and 512-way dry-runs unchanged.
+
+The second half of this module is the **out-of-core grid partitioner**
+(``ShardSpec`` / ``partition_domain``): the Z-block decomposition of
+``repro.core.blocks.BlockPlan`` is split into contiguous block ranges,
+one per device of a 1-D mesh slice. Each shard owns the storage units
+its blocks write back (its remainders plus its *left*-boundary common
+region) and keeps a read-only *ghost* of its right-boundary common,
+refreshed once per sweep by a versioned halo transfer from the right
+neighbor (see ``repro.core.sharded.ShardedExecutor``). The partition is
+a pure function of ``(ndiv, nshards)`` — deterministic for a given
+mesh, which the hypothesis suite asserts.
 """
 
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -141,3 +154,163 @@ def named_sharding_tree(axes_tree, shape_tree, mesh: Mesh, rules: Rules):
         shape_tree,
         is_leaf=_is_axes_leaf,
     )
+
+
+# ----------------------------------------------------------------------
+# out-of-core grid partitioner (multi-device sharded executor)
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """One shard of the out-of-core Z decomposition: the contiguous
+    *global* block range ``[block_lo, block_hi)`` of a ``BlockPlan``
+    with ``ndiv`` blocks, assigned to device ``index`` of ``nshards``.
+
+    The spec is pure layout — which blocks, which storage units, which
+    neighbors — so the graph builder, the live executor, and the
+    checkpoint manifests all derive the same footprint from it:
+
+    * **owned units**: ``R_i`` for every local block, plus the common
+      region at the shard's *left* boundary (``C_{block_lo-1}``) and
+      every interior common — exactly the units local writebacks
+      commit (block *i* writes ``R_i`` and ``C_{i-1}``);
+    * **ghost units**: the *right*-boundary common ``C_{block_hi-1}``
+      (committed by the right neighbor's first block, mirrored here by
+      a versioned halo put each sweep) and, for read-only fields,
+      every unit the local fetch footprint touches.
+
+    ``device`` optionally pins the shard to a ``jax.Device`` (emulated
+    CPU devices under ``--xla_force_host_platform_device_count`` count)
+    and is deliberately excluded from ``to_dict`` — checkpoint
+    manifests must restore on a differently-shaped host.
+    """
+
+    index: int
+    nshards: int
+    block_lo: int
+    block_hi: int
+    ndiv: int
+    device: Optional[Any] = dataclasses.field(
+        default=None, compare=False,
+    )
+
+    def __post_init__(self):
+        assert 0 <= self.index < self.nshards, (self.index, self.nshards)
+        assert 0 <= self.block_lo < self.block_hi <= self.ndiv, (
+            self.block_lo, self.block_hi, self.ndiv,
+        )
+
+    # ---- topology -----------------------------------------------------
+    @property
+    def first(self) -> bool:
+        """Shard holding global block 0 (the bottom domain edge)."""
+        return self.block_lo == 0
+
+    @property
+    def last(self) -> bool:
+        """Shard holding global block ndiv-1 (the top domain edge)."""
+        return self.block_hi == self.ndiv
+
+    @property
+    def nblocks(self) -> int:
+        return self.block_hi - self.block_lo
+
+    @property
+    def blocks(self) -> range:
+        """Global block indices this shard executes, in visit order."""
+        return range(self.block_lo, self.block_hi)
+
+    # ---- unit footprint ----------------------------------------------
+    def owned_units(self) -> List[Tuple[str, int]]:
+        """Units committed by local writebacks: every local remainder
+        plus the commons written by local blocks (block *i* writes
+        ``C_{i-1}``, so the shard owns ``C_{block_lo-1} ..
+        C_{block_hi-2}``)."""
+        out = [("R", i) for i in self.blocks]
+        lo = self.block_lo - 1 if not self.first else self.block_lo
+        out += [("C", j) for j in range(lo, self.block_hi - 1)]
+        return out
+
+    def ghost_units(self) -> List[Tuple[str, int]]:
+        """Read-write units mirrored from a neighbor: the right-
+        boundary common, refreshed by one halo put per sweep."""
+        return [] if self.last else [("C", self.block_hi - 1)]
+
+    def unit_keys(self) -> List[Tuple[str, int]]:
+        """Every unit in this shard's host store (owned + ghost) — the
+        local fetch/writeback footprint, and nothing else."""
+        return sorted(self.owned_units() + self.ghost_units())
+
+    def halo_units(self) -> List[Tuple[str, int]]:
+        """Units this shard *exports* each sweep: the committed left-
+        boundary common (full compressed payload, to the left
+        neighbor's ghost) and the held lower half of the right-boundary
+        common (raw planes, to the right neighbor's writeback)."""
+        out = []
+        if not self.first:
+            out.append(("C", self.block_lo - 1))
+        if not self.last:
+            out.append(("C", self.block_hi - 1))
+        return out
+
+    def to_dict(self) -> Dict[str, int]:
+        """JSON-able layout (checkpoint manifests) — no device pin."""
+        return {
+            "index": self.index, "nshards": self.nshards,
+            "block_lo": self.block_lo, "block_hi": self.block_hi,
+            "ndiv": self.ndiv,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, int],
+                  device: Optional[Any] = None) -> "ShardSpec":
+        return cls(
+            index=int(d["index"]), nshards=int(d["nshards"]),
+            block_lo=int(d["block_lo"]), block_hi=int(d["block_hi"]),
+            ndiv=int(d["ndiv"]), device=device,
+        )
+
+
+def partition_domain(
+    ndiv: int,
+    nshards: int,
+    *,
+    mesh: Optional[Mesh] = None,
+    devices: Optional[Sequence[Any]] = None,
+) -> List[ShardSpec]:
+    """Deterministically partition ``ndiv`` Z blocks over ``nshards``
+    contiguous shards: shard ``d`` gets blocks ``[floor(d*ndiv/N),
+    floor((d+1)*ndiv/N))`` — the balanced split (sizes differ by at
+    most one block, larger shards first when it does not divide), a
+    pure function of ``(ndiv, nshards)``.
+
+    ``mesh`` reuses the existing mesh plumbing: the shards are pinned
+    round-robin onto ``mesh.devices`` (flattened); ``devices`` pins an
+    explicit device list instead. With neither, shards carry no device
+    pin and run on the default device (single-process emulation).
+    """
+    if nshards < 1:
+        raise ValueError(f"nshards must be >= 1, got {nshards}")
+    if nshards > ndiv:
+        raise ValueError(
+            f"cannot split ndiv={ndiv} blocks over nshards={nshards} "
+            "shards: every shard needs at least one block"
+        )
+    if mesh is not None and devices is not None:
+        raise ValueError("pass mesh= or devices=, not both")
+    if mesh is not None:
+        devices = list(mesh.devices.flat)
+    pins: List[Optional[Any]] = (
+        [devices[d % len(devices)] for d in range(nshards)]
+        if devices else [None] * nshards
+    )
+    cuts = [d * ndiv // nshards for d in range(nshards + 1)]
+    return [
+        ShardSpec(
+            index=d, nshards=nshards,
+            block_lo=cuts[d], block_hi=cuts[d + 1],
+            ndiv=ndiv, device=pins[d],
+        )
+        for d in range(nshards)
+    ]
