@@ -28,7 +28,10 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
     zero, the checkpoint round trip (quiesce + ordered flush + atomic
     persist + restore) is lossless, and the overlapped periodic
     snapshot stalls the sweep loop less than the quiesced one (live
-    boundary blocking AND modeled makespan). Also records the
+    boundary blocking AND modeled makespan). Later PRs stack their own
+    invariants on top — temporal blocking (5), recovery (6), sharding
+    (7) and multi-tenant arbitration (8: the latency tenant's reserve
+    is never evicted and interleaving beats serial). Also records the
     compression-precision error curve (Fig. 7 trajectory)."""
     import pathlib
     import tempfile
@@ -424,6 +427,82 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
     # the 1-shard one on the deep smoke grid
     assert sh_identical, result["sharded"]
     assert ratio <= 0.5, result["sharded"]
+
+    # ------------------------------------------------------------------
+    # multi-tenant residency arbitration (PR 9): two tenants — a
+    # latency class holding a working-set reserve and a batch class
+    # bursting into slack — share one device budget. Tracks per-tenant
+    # hit rate and quota utilization, plus the scheduling payoff:
+    # modeled interleaved makespan vs running the tenants serially.
+    from repro.core.pipeline import tenant_timeline
+    from repro.core.tenancy import working_set_bytes
+    from repro.serving.ooc import TenantScheduler
+
+    tcfg = OOCConfig((64, 16, 16), 2, 1, paper_code_fields(2))
+    tsweeps = {"latency": 4, "batch": 4}
+    ws_lat = working_set_bytes(tcfg, "depth2")
+    ws_bat = working_set_bytes(tcfg, "temporal2")
+    tbudget = ws_lat + ws_bat // 2  # batch contends for slack
+    tp_cur = np.asarray(
+        stencil_ref.ricker_source((64, 16, 16)), np.float32
+    )
+    tp_prev = 0.95 * tp_cur
+    tvel2 = np.full((64, 16, 16), 0.07, np.float32)
+    tsched = TenantScheduler(tbudget)
+    tsched.submit(
+        "latency", tcfg, tp_prev, tp_cur, tvel2, schedule="depth2",
+        sweeps=tsweeps["latency"], reserve=ws_lat, priority=10,
+    )
+    tsched.submit(
+        "batch", tcfg, tp_prev, tp_cur, tvel2, schedule="temporal2",
+        sweeps=tsweeps["batch"], reserve=0, priority=0,
+    )
+    t0 = time.perf_counter()
+    tsched.run()
+    ten_wall = time.perf_counter() - t0
+    interleaved = tenant_timeline(
+        tsched.specs(), V100_PCIE, budget_bytes=tbudget
+    ).makespan
+    serial = sum(
+        sweep_timeline(
+            s.cfg, V100_PCIE, sweeps=s.sweeps, schedule=s.schedule,
+            cache_bytes=tbudget,
+        ).makespan
+        for s in tsched.specs()
+    )
+    tstats = tsched.stats()
+    per_tenant = {}
+    for name, ts_ in tstats["per_tenant"].items():
+        lookups = ts_["hits"] + ts_["misses"]
+        per_tenant[name] = {
+            "hit_rate": round(
+                ts_["hits"] / lookups if lookups else 0.0, 4
+            ),
+            "evictions": ts_["evictions"],
+            "peak_bytes": ts_["peak_bytes"],
+            "reserve": ts_["reserve"],
+            "quota_utilization": round(
+                ts_["peak_bytes"] / (ts_["reserve"] or tbudget), 4
+            ),
+        }
+    result["tenancy"] = {
+        "config": {
+            "shape": (64, 16, 16), "ndiv": 2, "sweeps": tsweeps,
+            "budget_bytes": tbudget,
+        },
+        "wall_s": round(ten_wall, 4),
+        "per_tenant": per_tenant,
+        "tenancy_interleaved_makespan_s": round(interleaved, 6),
+        "tenancy_serial_makespan_s": round(serial, 6),
+        "tenancy_makespan_ratio": round(interleaved / serial, 4),
+    }
+    # invariant 8 (PR 9): the latency tenant's reserve is inviolate
+    # (zero evictions under batch pressure) and interleaving the
+    # tenants on one device beats running them back to back
+    assert per_tenant["latency"]["evictions"] == 0, result["tenancy"]
+    assert per_tenant["batch"]["evictions"] > 0, result["tenancy"]
+    assert interleaved < serial, result["tenancy"]
+
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
     print(f"# wrote {out_path}", file=sys.stderr)

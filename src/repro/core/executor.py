@@ -275,6 +275,7 @@ class AsyncExecutor:
         retry: Optional[RetryPolicy] = None,
         injector: Optional[FaultInjector] = None,
         shard: Optional["ShardSpec"] = None,
+        residency=None,
     ):
         """Build a live executor over ``cfg``.
 
@@ -328,6 +329,15 @@ class AsyncExecutor:
             (``deliver_held``) and exporting the boundary payloads a
             ``repro.core.sharded.ShardedExecutor`` routes between
             shards.
+        residency:
+            Optional external residency object used VERBATIM instead of
+            constructing a private ``DeviceResidencyManager`` — the
+            multi-tenant injection point: ``serving.ooc.
+            TenantScheduler`` passes each executor a ``repro.core.
+            tenancy.TenantView`` over one shared, arbiter-managed
+            manager, so N runs compete for one budget under quota/
+            priority arbitration. ``cache_bytes``/``policy`` are
+            ignored when this is given (the view carries both).
         """
         self.cfg = cfg
         self.schedule = get_schedule(schedule)
@@ -353,7 +363,10 @@ class AsyncExecutor:
             list(shard.blocks) if shard is not None
             else list(range(self.plan.ndiv))
         )
-        self.cache = DeviceResidencyManager(cache_bytes, policy=policy)
+        self.cache = (
+            residency if residency is not None
+            else DeviceResidencyManager(cache_bytes, policy=policy)
+        )
         self.store = HostUnitStore(
             cfg, plan=self.plan, injector=injector, retry=self.retry,
             stats=self.cache.stats,
@@ -890,6 +903,31 @@ class AsyncExecutor:
                 restarts += 1
                 self._rollback(recovery.directory, e)
 
+    def advance_round(self, target: int) -> int:
+        """Advance ONE temporal round toward ``target`` completed
+        sweeps — the cooperative yield point at a round boundary.
+
+        ``run``'s loop is built from this, and the multi-tenant
+        ``serving.ooc.TenantScheduler`` drives each tenant's executor
+        one ``advance_round`` at a time in the deterministic
+        ``tenancy.interleave_rounds`` order. Returns the number of
+        sweeps advanced (``0`` when already at ``target``); raises
+        ``InjectedCrash`` when the injector has a crash point due at
+        the new boundary."""
+        if self.sweeps_done >= target:
+            return 0
+        # truncated final round: fuse only what remains
+        kr = min(self.temporal, target - self.sweeps_done)
+        self.sweep(kr)
+        if self.injector is not None and self.injector.crash_point(
+            self.sweeps_done
+        ):
+            raise InjectedCrash(
+                f"injected crash at sweep boundary "
+                f"{self.sweeps_done}"
+            )
+        return kr
+
     def _run_to(
         self, target: int, ckpt_policy: Optional[CheckpointPolicy]
     ) -> None:
@@ -898,16 +936,7 @@ class AsyncExecutor:
         points at every boundary, then drain."""
         last_ckpt = self._timer()
         while self.sweeps_done < target:
-            # truncated final round: fuse only what remains
-            kr = min(self.temporal, target - self.sweeps_done)
-            self.sweep(kr)
-            if self.injector is not None and self.injector.crash_point(
-                self.sweeps_done
-            ):
-                raise InjectedCrash(
-                    f"injected crash at sweep boundary "
-                    f"{self.sweeps_done}"
-                )
+            self.advance_round(target)
             if ckpt_policy is not None and ckpt_policy.due(
                 self.sweeps_done, self._timer() - last_ckpt
             ):
@@ -957,14 +986,11 @@ class AsyncExecutor:
         self._outraw.clear()
         self._flush_times.clear()
         # cold residency (device state died with the "process"), same
-        # cumulative stats surface; the byte gauges reset with it
+        # cumulative stats surface; the byte gauges reset with it. A
+        # TenantView's rollback_reset drops only ITS tenant from the
+        # shared manager — other tenants' residency survives the crash.
+        self.cache = self.cache.rollback_reset()
         stats = self.cache.stats
-        self.cache = DeviceResidencyManager(
-            self.cache.budget_bytes, policy=self.cache.policy
-        )
-        self.cache.stats = stats
-        stats.dirty_bytes = 0
-        stats.pinned_bytes = 0
         self.store.stats = stats
         step, leaves, extra, path = self._load_last_good(directory)
         self.store.load_state(leaves, extra["store"])

@@ -39,6 +39,7 @@ from repro.core.taskgraph import (  # noqa: F401  (re-exported API)
     Task,
     build_sharded_tasks,
     build_sweep_tasks,
+    build_tenant_tasks,
     get_schedule,
 )
 from repro.distributed.fault import FaultPlan, ReissuePolicy, RetryPolicy
@@ -431,4 +432,30 @@ def sharded_timeline(
             cfg, nshards, sweeps=sweeps, schedule=schedule,
             cache_bytes=cache_bytes, stats=stats, policy=policy,
         ), hw, retry=retry, faults=faults,
+    )
+
+
+def tenant_timeline(
+    tenants, hw: Hardware,
+    budget_bytes: int = 0,
+    stats: Optional[Dict[str, object]] = None,
+    policy: str = "write-back",
+) -> Timeline:
+    """Replay a multi-tenant run (PR 9) on the DES: N independent runs
+    (``repro.core.tenancy.TenantSpec`` sequence) interleaved in the
+    deterministic ``tenancy.interleave_rounds`` order onto ONE shared
+    three-stream pipeline and one arbiter-managed residency budget.
+
+    The modeled makespan is the shared-device timeline the live
+    ``serving.ooc.TenantScheduler`` produces; comparing it against the
+    sum of each tenant's solo ``sweep_timeline`` prices exactly the
+    cross-tenant stream overlap interleaving buys (a compute-heavy
+    cached tenant's stencils hide a transfer-heavy tenant's wire
+    time). ``stats["per_tenant"]`` receives each tenant's modeled
+    residency counters and peak bytes."""
+    return simulate(
+        build_tenant_tasks(
+            tenants, budget_bytes=budget_bytes, stats=stats,
+            policy=policy,
+        ), hw,
     )

@@ -1,0 +1,267 @@
+"""Multi-tenant residency arbitration: N runs, one device, one budget.
+
+PR 9 turns the single-run engine into a multiplexed one. N independent
+out-of-core runs — each its own ``OOCConfig``, schedule and host store
+— share one device and ONE ``DeviceResidencyManager``. Three pure,
+deterministic policy pieces make that safe and replayable:
+
+* ``repro.core.unitcache.ResidencyArbiter`` (+ ``TenantQuota``) — the
+  quota table: a hard per-tenant byte *reserve* no other tenant's
+  deposit may evict below, soft burst into whatever slack remains, and
+  a *priority* ordering victims (the batch tenant's LRU goes before a
+  latency tenant's working set). Lives next to the manager; consulted
+  by its ``_plan_victims``.
+* ``TenantView`` (here) — the namespacing facade a tenant's
+  ``AsyncExecutor`` is injected with (``AsyncExecutor(residency=...)``)
+  instead of constructing its own manager: every key becomes
+  ``(tenant, unit_key)`` in the shared manager, stats read the
+  tenant's own ``CacheStats`` breakdown, and eviction-flush handbacks
+  that belong to ANOTHER tenant are routed to that tenant's executor
+  (the victim must materialize its own dirty payload to its own host
+  store — never the depositor's).
+* ``interleave_rounds`` (here) — the global round order. Both the live
+  ``serving.ooc.TenantScheduler`` and the graph builder
+  (``taskgraph.build_tenant_tasks``) walk this exact sequence, which
+  is what makes per-tenant model/live transfer-multiset parity hold
+  under adversarial interleaving — the same contract PRs 2-8
+  established for budgets, faults and shards.
+
+Checkpoint cuts are per-tenant: pins and COW shadows key on the
+namespaced keys, so one tenant's overlapped snapshot freezes only its
+own version vector while every other tenant keeps depositing,
+evicting and bursting into the shared budget.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Hashable, List, Optional, Tuple
+
+from repro.core.taskgraph import get_schedule, unit_wire_bytes
+from repro.core.unitcache import (
+    DepositResult,
+    DeviceResidencyManager,
+    Entry,
+)
+
+
+class AdmissionError(RuntimeError):
+    """A tenant could not be admitted: its reserve does not fit the
+    unreserved budget (or, with ``require_fit``, its working set does
+    not fit its reserve)."""
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's static contract, shared verbatim by the live
+    scheduler and the graph builder."""
+
+    name: str
+    cfg: Any  # OOCConfig
+    schedule: str = "depth2"
+    sweeps: int = 1
+    reserve: int = 0
+    priority: int = 0
+
+
+def interleave_rounds(tenants) -> List[Tuple[str, int, int]]:
+    """The deterministic global round order: round-robin in submission
+    order, each turn advancing one temporal round ``kr = min(k,
+    remaining)``; finished tenants drop out, the rest keep cycling.
+    Returns ``(name, start_sweep, kr)`` triples — ``start_sweep`` is
+    the tenant-local label the live executor's ``sweeps_done`` holds
+    when it issues that round's fetches.
+
+    >>> a = TenantSpec("a", None, "temporal2", sweeps=3)
+    >>> b = TenantSpec("b", None, "unitgrain", sweeps=2)
+    >>> interleave_rounds([a, b])
+    [('a', 0, 2), ('b', 0, 1), ('a', 2, 1), ('b', 1, 1)]
+    """
+    temporal = {t.name: get_schedule(t.schedule).temporal for t in tenants}
+    total = {t.name: int(t.sweeps) for t in tenants}
+    done = {t.name: 0 for t in tenants}
+    order = [t.name for t in tenants]
+    out: List[Tuple[str, int, int]] = []
+    while any(done[n] < total[n] for n in order):
+        for n in order:
+            if done[n] >= total[n]:
+                continue
+            kr = min(temporal[n], total[n] - done[n])
+            out.append((n, done[n], kr))
+            done[n] += kr
+    return out
+
+
+def working_set_bytes(cfg, schedule: str = "unitgrain") -> int:
+    """Exact steady-state residency footprint of one tenant: the bytes
+    the shared manager holds once every cacheable unit is resident —
+    writeback units of rw fields (dirty deposits) plus fetch units of
+    read-only fields. This is the natural ``reserve`` for a
+    latency-class tenant (its working set can never be stolen) and the
+    admission-control yardstick."""
+    sched = get_schedule(schedule)
+    plan = cfg.temporal_plan(sched.temporal)
+    _, y, x = cfg.shape
+    itemsize = 4 if cfg.dtype == "float32" else 8
+    total = 0
+    for _, spec in cfg.fields.items():
+        units = set()
+        for i in range(plan.ndiv):
+            if spec.role == "rw":
+                units.update(plan.writeback_units(i))
+            else:
+                units.update(plan.fetch_units(i))
+        for kind, idx in units:
+            lo, hi = (
+                plan.remainder(idx) if kind == "R" else plan.common(idx)
+            )
+            total += unit_wire_bytes(spec, (hi - lo, y, x), itemsize)
+    return total
+
+
+# router callback: (victim_tenant, unit_key, entry) -> None; must
+# materialize the victim's dirty payload to the VICTIM's host store
+FlushRouter = Callable[[str, Hashable, Entry], None]
+
+
+class TenantView:
+    """One tenant's window onto the shared residency manager.
+
+    Exposes the exact surface ``AsyncExecutor`` expects of its
+    ``self.cache`` (so an executor built with ``residency=view`` needs
+    no other change): keys are transparently namespaced ``(tenant,
+    key)``, gauges/stats read the tenant's own breakdown, and deposit/
+    release flush handbacks are SPLIT — this tenant's dirty victims
+    come back (its executor flushes them to its own store, as
+    single-tenant), a foreign tenant's go through ``router`` to the
+    victim's executor. Without a router a cross-tenant eviction raises:
+    silently flushing tenant B's payload through tenant A's store
+    would corrupt both.
+    """
+
+    def __init__(
+        self,
+        manager: DeviceResidencyManager,
+        tenant: str,
+        router: Optional[FlushRouter] = None,
+    ):
+        assert manager.arbiter is not None, (
+            "TenantView requires an arbiter-managed manager"
+        )
+        self.manager = manager
+        self.tenant = tenant
+        self.router = router
+        self.stats = manager.tenant_stats_for(tenant)
+
+    # -- passthrough configuration/gauges ------------------------------
+    @property
+    def budget_bytes(self) -> int:
+        return self.manager.budget_bytes
+
+    @property
+    def policy(self) -> str:
+        return self.manager.policy
+
+    @property
+    def enabled(self) -> bool:
+        return self.manager.enabled
+
+    @property
+    def write_back(self) -> bool:
+        return self.manager.write_back
+
+    @property
+    def bytes_used(self) -> int:
+        return self.manager.tenant_bytes.get(self.tenant, 0)
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.manager.tenant_peak.get(self.tenant, 0)
+
+    @property
+    def dirty_bytes(self) -> int:
+        return self.stats.dirty_bytes
+
+    # -- key namespacing ----------------------------------------------
+    def _key(self, key: Hashable) -> Tuple[str, Hashable]:
+        return (self.tenant, key)
+
+    def _split(self, flushes) -> List[Tuple[Hashable, Entry]]:
+        """Own flush handbacks (keys un-namespaced); foreign ones are
+        routed to the victim tenant's executor."""
+        own: List[Tuple[Hashable, Entry]] = []
+        for (owner, inner), ent in flushes:
+            if owner == self.tenant:
+                own.append((inner, ent))
+            elif self.router is not None:
+                self.router(owner, inner, ent)
+            else:
+                raise RuntimeError(
+                    f"cross-tenant eviction flush for {owner!r} with no "
+                    "router: the victim's payload has nowhere to go"
+                )
+        return own
+
+    # -- the manager surface the executor drives -----------------------
+    def lookup(self, key: Hashable, version: int):
+        return self.manager.lookup(self._key(key), version)
+
+    def peek(self, key: Hashable) -> Optional[Entry]:
+        return self.manager.peek(self._key(key))
+
+    def deposit(
+        self,
+        key: Hashable,
+        version: int,
+        value: Any,
+        nbytes: int,
+        dirty: bool = False,
+        bumps: int = 0,
+    ) -> DepositResult:
+        res = self.manager.deposit(
+            self._key(key), version, value, nbytes, dirty=dirty,
+            bumps=bumps,
+        )
+        return DepositResult(res.stored, self._split(res.flushes))
+
+    def dirty_entries(self) -> List[Tuple[Hashable, Entry]]:
+        return [
+            (inner, e)
+            for (owner, inner), e in self.manager.dirty_entries()
+            if owner == self.tenant
+        ]
+
+    def mark_flushed(self, key: Hashable) -> None:
+        self.manager.mark_flushed(self._key(key))
+
+    def note_d2h_elided(self, nbytes: int) -> None:
+        self.manager.note_d2h_elided(nbytes, tenant=self.tenant)
+
+    def pin(self, key: Hashable) -> Optional[Entry]:
+        return self.manager.pin(self._key(key))
+
+    def pinned_entry(self, key: Hashable) -> Optional[Entry]:
+        return self.manager.pinned_entry(self._key(key))
+
+    def release(self, key: Hashable) -> List[Tuple[Hashable, Entry]]:
+        return self._split(self.manager.release(self._key(key)))
+
+    def pinned_keys(self) -> List[Hashable]:
+        return [
+            inner
+            for owner, inner in self.manager.pinned_keys()
+            if owner == self.tenant
+        ]
+
+    def note_ckpt_flush(self, nbytes: int) -> None:
+        self.manager.note_ckpt_flush(nbytes, tenant=self.tenant)
+
+    def rollback_reset(self) -> "TenantView":
+        """Per-tenant crash rollback: drop only THIS tenant's residency
+        (entries + shadows) from the shared manager; every other
+        tenant's entries, pins and stats are untouched — the isolation
+        edge the two-tenant chaos tier asserts."""
+        self.manager.drop_tenant(self.tenant)
+        self.stats.dirty_bytes = 0
+        self.stats.pinned_bytes = 0
+        return self

@@ -91,6 +91,64 @@ POLICIES = ("write-back", "write-through")
 
 
 @dataclass
+class TenantQuota:
+    """One tenant's residency contract: ``reserve`` bytes are a hard
+    floor no other tenant's deposit may evict below; anything a tenant
+    holds beyond its reserve is soft burst into shared slack, stealable
+    by others. ``priority`` orders victim selection: lower-priority
+    tenants' (stealable) bytes are always evicted before a
+    higher-priority tenant's."""
+
+    reserve: int
+    priority: int = 0
+
+
+@dataclass
+class ResidencyArbiter:
+    """Pure multi-tenant eviction policy consulted by the residency
+    manager when keys are namespaced ``(tenant, unit_key)``.
+
+    The arbiter holds only the quota table; the victim rule lives in
+    ``DeviceResidencyManager._plan_victims`` and depends solely on the
+    quotas and the global LRU order — never on grant order — so two
+    arbiters granted the same quotas in any order drive identical
+    eviction sequences (asserted by hypothesis in
+    ``tests/test_tenancy_properties.py``).
+
+    >>> arb = ResidencyArbiter()
+    >>> arb.grant("latency", reserve=60, priority=10)
+    >>> arb.grant("batch", reserve=0, priority=0)
+    >>> mgr = DeviceResidencyManager(budget_bytes=100, arbiter=arb)
+    >>> _ = mgr.deposit(("batch", "b0"), 1, "payload", 40)
+    >>> _ = mgr.deposit(("latency", "l0"), 1, "payload", 60)
+    >>> _ = mgr.deposit(("latency", "l1"), 1, "payload", 40)
+    >>> sorted(mgr._entries)  # batch LRU evicted before latency's set
+    [('latency', 'l0'), ('latency', 'l1')]
+    >>> mgr.tenant_bytes == {"batch": 0, "latency": 100}
+    True
+    """
+
+    quotas: Dict[str, TenantQuota] = field(default_factory=dict)
+
+    def grant(self, tenant: str, reserve: int, priority: int = 0) -> None:
+        self.quotas[tenant] = TenantQuota(int(reserve), int(priority))
+
+    def revoke(self, tenant: str) -> None:
+        self.quotas.pop(tenant, None)
+
+    def reserve_of(self, tenant: str) -> int:
+        q = self.quotas.get(tenant)
+        return q.reserve if q is not None else 0
+
+    def priority_of(self, tenant: str) -> int:
+        q = self.quotas.get(tenant)
+        return q.priority if q is not None else 0
+
+    def reserved_total(self) -> int:
+        return sum(q.reserve for q in self.quotas.values())
+
+
+@dataclass
 class CacheStats:
     hits: int = 0
     misses: int = 0
@@ -223,6 +281,11 @@ class DeviceResidencyManager:
     budget_bytes: int = 0
     policy: str = "write-back"
     stats: CacheStats = field(default_factory=CacheStats)
+    # multi-tenant mode (PR 9): when an arbiter is attached, every key
+    # MUST be namespaced ``(tenant, unit_key)`` and eviction follows the
+    # quota/priority rule in _plan_victims instead of plain LRU. With
+    # arbiter=None the manager is byte-for-byte the single-tenant LRU.
+    arbiter: Optional[ResidencyArbiter] = None
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -237,6 +300,13 @@ class DeviceResidencyManager:
         self._shadows: Dict[Hashable, Entry] = {}
         self.bytes_used = 0
         self.peak_bytes = 0
+        # per-tenant breakdowns (arbiter mode only): resident bytes
+        # (live + shadow), high-water mark, and a CacheStats each —
+        # the same object each tenant's HostUnitStore mirrors its wire
+        # counters into, so one per-tenant surface covers the engine
+        self.tenant_bytes: Dict[str, int] = {}
+        self.tenant_peak: Dict[str, int] = {}
+        self.tenant_stats: Dict[str, CacheStats] = {}
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -254,13 +324,41 @@ class DeviceResidencyManager:
         return self.stats.dirty_bytes
 
     # ------------------------------------------------------------------
+    # multi-tenant plumbing (all no-ops when arbiter is None)
+    # ------------------------------------------------------------------
+    def tenant_stats_for(self, tenant: str) -> CacheStats:
+        """The per-tenant stats object, created on first use."""
+        ts = self.tenant_stats.get(tenant)
+        if ts is None:
+            ts = self.tenant_stats[tenant] = CacheStats()
+        return ts
+
+    def _tstats(self, key: Hashable) -> Optional[CacheStats]:
+        if self.arbiter is None:
+            return None
+        return self.tenant_stats_for(key[0])
+
+    def _taccount(self, key: Hashable, delta: int) -> None:
+        """Adjust the owning tenant's resident-byte gauge by ``delta``."""
+        if self.arbiter is None:
+            return
+        tenant = key[0]
+        n = self.tenant_bytes.get(tenant, 0) + delta
+        self.tenant_bytes[tenant] = n
+        if delta > 0:
+            self.tenant_peak[tenant] = max(self.tenant_peak.get(tenant, 0), n)
+
+    # ------------------------------------------------------------------
     def lookup(self, key: Hashable, version: int) -> Tuple[bool, Any]:
         """``(hit, value)`` for the unit at ``version``; hits refresh
         LRU recency, stale *clean* entries are dropped (stale dirty
         entries stay — see below)."""
+        ts = self._tstats(key)
         ent = self._entries.get(key)
         if ent is None:
             self.stats.misses += 1
+            if ts is not None:
+                ts.misses += 1
             return False, None
         if ent.version != version:
             # stale for this request: clean entries are dropped so
@@ -272,10 +370,15 @@ class DeviceResidencyManager:
             if not ent.dirty and not ent.pinned:
                 self._drop(key)
             self.stats.misses += 1
+            if ts is not None:
+                ts.misses += 1
             return False, None
         self._entries.move_to_end(key)
         self.stats.hits += 1
         self.stats.hit_wire_bytes += ent.nbytes
+        if ts is not None:
+            ts.hits += 1
+            ts.hit_wire_bytes += ent.nbytes
         return True, ent.value
 
     def peek(self, key: Hashable) -> Optional[Entry]:
@@ -307,7 +410,10 @@ class DeviceResidencyManager:
         pure accounting (``CacheStats.version_bumps``): one fused
         visit counts as ONE deposit however many sweeps it carries,
         and the bump counter is what scales with simulated time."""
+        ts = self._tstats(key)
         self.stats.version_bumps += int(bumps)
+        if ts is not None:
+            ts.version_bumps += int(bumps)
         dirty = bool(dirty) and self.write_back
         if key in self._entries:
             old = self._entries[key]
@@ -321,30 +427,63 @@ class DeviceResidencyManager:
                     # unreachable by the host path from here on: the
                     # newer deposit carries the dirty state forward
                     self.stats.dirty_bytes -= old.nbytes
+                    if ts is not None:
+                        ts.dirty_bytes -= old.nbytes
                     old.dirty = False
                 self._shadows[key] = old
                 self.stats.cow_shadows += 1
+                if ts is not None:
+                    ts.cow_shadows += 1
             else:
                 # superseded: the old payload can never be needed again
                 self._drop(key)
         if not self.enabled or nbytes > self.budget_bytes:
             self.stats.refusals += 1
+            if ts is not None:
+                ts.refusals += 1
             return DepositResult(False)
-        flushes = self._evict_for(int(nbytes))
+        if self.arbiter is None:
+            flushes = self._evict_for(int(nbytes))
+        else:
+            # plan first, evict after: a deposit the quotas cannot make
+            # room for is REFUSED without disturbing anyone's residency
+            # (no over-admission across tenants), and the refusal is
+            # harmless to the depositor — its writeback just pays the
+            # ordinary D2H instead of committing on device.
+            victims, fits = self._plan_victims(int(nbytes), key[0])
+            if not fits:
+                self.stats.refusals += 1
+                if ts is not None:
+                    ts.refusals += 1
+                return DepositResult(False)
+            flushes = self._commit_evictions(victims)
         self._entries[key] = Entry(version, value, int(nbytes), dirty)
         self.bytes_used += int(nbytes)
         self.peak_bytes = max(self.peak_bytes, self.bytes_used)
+        self._taccount(key, int(nbytes))
         self.stats.deposits += 1
+        if ts is not None:
+            ts.deposits += 1
         if dirty:
             self.stats.dirty_bytes += int(nbytes)
+            if ts is not None:
+                ts.dirty_bytes += int(nbytes)
         return DepositResult(True, flushes)
 
-    def _evict_for(self, incoming: int) -> List[Tuple[Hashable, Entry]]:
+    def _evict_for(
+        self, incoming: int, for_key: Optional[Hashable] = None
+    ) -> List[Tuple[Hashable, Entry]]:
         """LRU eviction until ``incoming`` more bytes fit the budget,
         skipping pinned entries (a snapshot's cut may not be evicted —
         pins raise pressure transiently instead, reclaimed at
         release). Evicted *dirty* entries are returned for the caller
-        to flush (flush-on-evict)."""
+        to flush (flush-on-evict). In arbiter mode the victim order is
+        the quota/priority rule (best effort here — deposit handles
+        refusal itself via ``_plan_victims``)."""
+        if self.arbiter is not None:
+            on_behalf = for_key[0] if for_key is not None else None
+            victims, _ = self._plan_victims(incoming, on_behalf)
+            return self._commit_evictions(victims)
         flushes: List[Tuple[Hashable, Entry]] = []
         while self.bytes_used + incoming > self.budget_bytes:
             victim = next(
@@ -362,6 +501,78 @@ class DeviceResidencyManager:
                 self.stats.dirty_bytes -= ent.nbytes
                 self.stats.flushes += 1
                 self.stats.flush_wire_bytes += ent.nbytes
+                flushes.append((victim, ent))
+        return flushes
+
+    def _plan_victims(
+        self, incoming: int, for_tenant: Optional[str]
+    ) -> Tuple[List[Hashable], bool]:
+        """Quota/priority victim selection (arbiter mode): the ordered
+        eviction list making room for ``incoming`` bytes on behalf of
+        ``for_tenant``, and whether the budget can actually be met.
+
+        The rule, applied greedily until the budget holds:
+
+        * pinned entries (and COW shadows) are never victims — a
+          snapshot's cut cannot be stolen across tenants;
+        * the depositing tenant's own entries are always stealable
+          (its reserve protects it from *others*, not from itself);
+        * a foreign tenant's entry is stealable only while evicting it
+          leaves that tenant at or above its hard reserve;
+        * among stealable entries, pick the lowest ``(owner priority,
+          LRU rank)`` — the batch tenant's LRU goes before a
+          latency tenant's working set, and ties fall to global LRU.
+
+        Pure planning: no state is touched, so a refused deposit
+        leaves every tenant's residency exactly as it found it."""
+        victims: List[Hashable] = []
+        freed = 0
+        remaining = dict(self.tenant_bytes)
+        chosen = set()
+        while self.bytes_used - freed + incoming > self.budget_bytes:
+            best = None
+            for rank, (k, e) in enumerate(self._entries.items()):
+                if e.pinned or k in chosen:
+                    continue
+                owner = k[0]
+                if owner != for_tenant:
+                    floor = self.arbiter.reserve_of(owner)
+                    if remaining.get(owner, 0) - e.nbytes < floor:
+                        continue  # hard reserve: never violated
+                cand = (self.arbiter.priority_of(owner), rank)
+                if best is None or cand < best[0]:
+                    best = (cand, k, e)
+            if best is None:
+                return victims, False  # cannot make room under quotas
+            _, k, e = best
+            chosen.add(k)
+            victims.append(k)
+            freed += e.nbytes
+            remaining[k[0]] = remaining.get(k[0], 0) - e.nbytes
+        return victims, True
+
+    def _commit_evictions(
+        self, victims: List[Hashable]
+    ) -> List[Tuple[Hashable, Entry]]:
+        """Evict a planned victim list, attributing each eviction (and
+        any flush handback) to the VICTIM's tenant stats."""
+        flushes: List[Tuple[Hashable, Entry]] = []
+        for victim in victims:
+            ent = self._entries.pop(victim)
+            self.bytes_used -= ent.nbytes
+            self._taccount(victim, -ent.nbytes)
+            ts = self._tstats(victim)
+            self.stats.evictions += 1
+            if ts is not None:
+                ts.evictions += 1
+            if ent.dirty:
+                self.stats.dirty_bytes -= ent.nbytes
+                self.stats.flushes += 1
+                self.stats.flush_wire_bytes += ent.nbytes
+                if ts is not None:
+                    ts.dirty_bytes -= ent.nbytes
+                    ts.flushes += 1
+                    ts.flush_wire_bytes += ent.nbytes
                 flushes.append((victim, ent))
         return flushes
 
@@ -384,12 +595,23 @@ class DeviceResidencyManager:
         self.stats.dirty_bytes -= ent.nbytes
         self.stats.flushes += 1
         self.stats.flush_wire_bytes += ent.nbytes
+        ts = self._tstats(key)
+        if ts is not None:
+            ts.dirty_bytes -= ent.nbytes
+            ts.flushes += 1
+            ts.flush_wire_bytes += ent.nbytes
 
-    def note_d2h_elided(self, nbytes: int) -> None:
+    def note_d2h_elided(
+        self, nbytes: int, tenant: Optional[str] = None
+    ) -> None:
         """Account one writeback that committed on device with no host
         copy (its D2H never touches the wire as its own transfer)."""
         self.stats.d2h_elided += 1
         self.stats.d2h_elided_wire_bytes += int(nbytes)
+        if tenant is not None and self.arbiter is not None:
+            ts = self.tenant_stats_for(tenant)
+            ts.d2h_elided += 1
+            ts.d2h_elided_wire_bytes += int(nbytes)
 
     # ------------------------------------------------------------------
     # overlapped checkpoint cut: COW pin / release
@@ -428,6 +650,10 @@ class DeviceResidencyManager:
         ent.pinned = True
         self.stats.pins += 1
         self.stats.pinned_bytes += ent.nbytes
+        ts = self._tstats(key)
+        if ts is not None:
+            ts.pins += 1
+            ts.pinned_bytes += ent.nbytes
         return ent
 
     def pinned_entry(self, key: Hashable) -> Optional[Entry]:
@@ -451,11 +677,16 @@ class DeviceResidencyManager:
         handback as ``deposit``). No-op (empty list) if nothing is
         pinned."""
         freed = False
+        ts = self._tstats(key)
         shadow = self._shadows.pop(key, None)
         if shadow is not None:
             self.bytes_used -= shadow.nbytes
+            self._taccount(key, -shadow.nbytes)
             self.stats.pinned_bytes -= shadow.nbytes
             self.stats.pin_releases += 1
+            if ts is not None:
+                ts.pinned_bytes -= shadow.nbytes
+                ts.pin_releases += 1
             freed = True
         else:
             ent = self._entries.get(key)
@@ -463,8 +694,11 @@ class DeviceResidencyManager:
                 ent.pinned = False
                 self.stats.pinned_bytes -= ent.nbytes
                 self.stats.pin_releases += 1
+                if ts is not None:
+                    ts.pinned_bytes -= ent.nbytes
+                    ts.pin_releases += 1
                 freed = True
-        return self._evict_for(0) if freed else []
+        return self._evict_for(0, key) if freed else []
 
     def pinned_keys(self) -> List[Hashable]:
         """Keys currently pinned (live or shadowed), LRU-first."""
@@ -472,19 +706,72 @@ class DeviceResidencyManager:
         out.extend(k for k in self._shadows if k not in out)
         return out
 
-    def note_ckpt_flush(self, nbytes: int) -> None:
+    def note_ckpt_flush(
+        self, nbytes: int, tenant: Optional[str] = None
+    ) -> None:
         """Account one snapshot D2H: a pinned payload materialized
         into a checkpoint shard (distinct from host-store flushes)."""
         self.stats.ckpt_flushes += 1
         self.stats.ckpt_flush_wire_bytes += int(nbytes)
+        if tenant is not None and self.arbiter is not None:
+            ts = self.tenant_stats_for(tenant)
+            ts.ckpt_flushes += 1
+            ts.ckpt_flush_wire_bytes += int(nbytes)
+
+    # ------------------------------------------------------------------
+    # multi-tenant lifecycle
+    # ------------------------------------------------------------------
+    def drop_tenant(self, tenant: str) -> None:
+        """Forget every entry and shadow ``tenant`` owns — its retire
+        (after a flush) or its crash rollback (residency is cold after
+        a restore anyway). Dirty payloads are dropped WITHOUT a flush:
+        callers that need them must drain first. No other tenant's
+        residency, pins, or stats are touched — the isolation edge the
+        chaos tier leans on."""
+        assert self.arbiter is not None, "drop_tenant needs arbiter mode"
+        ts = self.tenant_stats.get(tenant)
+        for k in [k for k in self._entries if k[0] == tenant]:
+            ent = self._entries.pop(k)
+            self.bytes_used -= ent.nbytes
+            if ent.dirty:
+                self.stats.dirty_bytes -= ent.nbytes
+                if ts is not None:
+                    ts.dirty_bytes -= ent.nbytes
+            if ent.pinned:
+                self.stats.pinned_bytes -= ent.nbytes
+                if ts is not None:
+                    ts.pinned_bytes -= ent.nbytes
+        for k in [k for k in self._shadows if k[0] == tenant]:
+            shadow = self._shadows.pop(k)
+            self.bytes_used -= shadow.nbytes
+            self.stats.pinned_bytes -= shadow.nbytes
+            if ts is not None:
+                ts.pinned_bytes -= shadow.nbytes
+        self.tenant_bytes[tenant] = 0
+
+    def rollback_reset(self) -> "DeviceResidencyManager":
+        """A cold manager for a crash rollback: same budget/policy and
+        the SAME stats object (counters survive recovery; the dirty and
+        pinned gauges reset with the lost residency). The executor's
+        ``_rollback`` swaps to the returned manager; a ``TenantView``
+        overrides this to drop only its own tenant instead."""
+        mgr = DeviceResidencyManager(self.budget_bytes, policy=self.policy)
+        mgr.stats = self.stats
+        self.stats.dirty_bytes = 0
+        self.stats.pinned_bytes = 0
+        return mgr
 
     # ------------------------------------------------------------------
     def _drop(self, key: Hashable) -> None:
         ent = self._entries.pop(key, None)
         if ent is not None:
             self.bytes_used -= ent.nbytes
+            self._taccount(key, -ent.nbytes)
             if ent.dirty:
                 self.stats.dirty_bytes -= ent.nbytes
+                ts = self._tstats(key)
+                if ts is not None:
+                    ts.dirty_bytes -= ent.nbytes
 
 
 # The PR 2 name: the read-side behavior (lookup/deposit/LRU/budget) is

@@ -73,6 +73,17 @@ class ServeEngine:
                 self.active[slot] = self.pending.pop(0)
                 self.pos[slot] = 0
 
+    def _sample(self, row: np.ndarray) -> int:
+        """Temperature sampling in float64. The softmax must be computed
+        and renormalized in double precision: a float32 softmax can sum
+        to 1 +/- ~1e-7, which `np.random.Generator.choice` rejects
+        (its tolerance on `p` is ~1.49e-8)."""
+        z = row.astype(np.float64) / self.temperature
+        z = z - z.max()
+        prob = np.exp(z)
+        prob = prob / prob.sum()
+        return int(self.rng.choice(len(prob), p=prob))
+
     def step(self) -> Dict[int, List[int]]:
         """One engine iteration: feed each active slot one token
         (prompt token while prefilling, else the model's own sample).
@@ -102,10 +113,7 @@ class ServeEngine:
             if self.pos[slot] < len(req.prompt):
                 continue  # still prefilling
             if self.temperature > 0:
-                z = logits[slot] / self.temperature
-                z = z - z.max()
-                prob = np.exp(z) / np.exp(z).sum()
-                tok = int(self.rng.choice(len(prob), p=prob))
+                tok = self._sample(logits[slot])
             else:
                 tok = int(logits[slot].argmax())
             req.out.append(tok)

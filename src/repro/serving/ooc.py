@@ -1,0 +1,338 @@
+"""Multi-tenant out-of-core serving: N stencil runs, one device.
+
+``TenantScheduler`` is the live half of PR 9's multi-tenancy (the
+policy half lives in ``repro.core.tenancy`` + the arbiter in
+``repro.core.unitcache``): it multiplexes N independent
+``AsyncExecutor`` runs — each with its own ``OOCConfig``, schedule,
+host store and (optionally) fault injector + recovery policy — onto
+one device and ONE shared, arbiter-managed ``DeviceResidencyManager``.
+
+The moving pieces:
+
+* **admission control** — ``submit`` grants each tenant a hard byte
+  *reserve* (default: its exact working set, so a latency-class
+  tenant's residency can never be stolen). A reserve that does not fit
+  the unreserved budget is rejected (``AdmissionError``) or queued
+  (``admission="queue"``) until running tenants retire and free
+  theirs.
+* **deterministic interleave** — ``run`` drives each tenant's executor
+  one temporal round at a time (``AsyncExecutor.advance_round``) in
+  the exact ``tenancy.interleave_rounds`` order the graph builder
+  (``taskgraph.build_tenant_tasks``) replays, which is what makes
+  per-tenant model/live transfer-multiset parity hold under the
+  adversarial interleaving (tests/test_tenancy.py).
+* **cross-tenant flush routing** — when tenant A's deposit evicts
+  tenant B's dirty resident, the manager's handback is routed to B's
+  executor, which materializes the payload into B's OWN host store
+  (and records the flush in B's transfer log at B's sweep label).
+* **per-tenant checkpoint cuts** — ``checkpoint_tenant`` freezes one
+  tenant's version vector (quiesce + flush only ITS dirty residents,
+  keyed under its namespace) while every other tenant keeps running
+  and mutating the shared cache; pins and COW shadows never cross
+  tenants.
+* **fault isolation** — a tenant submitted with a ``RecoveryPolicy``
+  rolls back alone: its ``TenantView.rollback_reset`` drops only its
+  own residency, so a crash in tenant A neither corrupts nor rolls
+  back tenant B (tests/test_chaos.py two-tenant band).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, Hashable, List, Optional
+
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core.executor import AsyncExecutor, RecoveryPolicy
+from repro.core.tenancy import (
+    AdmissionError,
+    TenantSpec,
+    TenantView,
+    interleave_rounds,
+    working_set_bytes,
+)
+from repro.core.unitcache import (
+    DeviceResidencyManager,
+    Entry,
+    ResidencyArbiter,
+)
+from repro.distributed.fault import FaultError, FaultInjector, RetryPolicy
+
+__all__ = [
+    "AdmissionError",
+    "TenantRun",
+    "TenantScheduler",
+]
+
+
+@dataclass
+class TenantRun:
+    """One admitted tenant: its static spec, its live executor, and
+    its lifecycle state."""
+
+    spec: TenantSpec
+    executor: AsyncExecutor
+    recovery: Optional[RecoveryPolicy] = None
+    restarts: int = 0
+    done: bool = False  # reached its sweep target (window drained)
+    retired: bool = False  # residency dropped, reserve revoked
+
+
+class TenantScheduler:
+    """Multiplex N out-of-core runs onto one device under one shared,
+    quota/priority-arbitrated residency budget. See the module
+    docstring for the contract; the important construction detail is
+    that each tenant's executor is built with ``residency=TenantView(
+    shared_manager, name, router=...)`` — the executors themselves are
+    unmodified single-run engines competing through the view."""
+
+    def __init__(
+        self,
+        budget_bytes: int,
+        policy: str = "write-back",
+        admission: str = "reject",
+    ):
+        if admission not in ("reject", "queue"):
+            raise ValueError(
+                f"unknown admission mode {admission!r}; "
+                "expected 'reject' or 'queue'"
+            )
+        self.budget_bytes = int(budget_bytes)
+        self.policy = policy
+        self.admission = admission
+        self.arbiter = ResidencyArbiter()
+        self.manager = DeviceResidencyManager(
+            self.budget_bytes, policy=policy, arbiter=self.arbiter
+        )
+        self.tenants: "OrderedDict[str, TenantRun]" = OrderedDict()
+        self.waiting: List[Dict[str, object]] = []
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def unreserved_bytes(self) -> int:
+        return self.budget_bytes - self.arbiter.reserved_total()
+
+    def submit(
+        self,
+        name: str,
+        cfg,
+        p_prev: np.ndarray,
+        p_cur: np.ndarray,
+        vel2: np.ndarray,
+        *,
+        schedule: str = "depth2",
+        sweeps: int = 1,
+        reserve: Optional[int] = None,
+        priority: int = 0,
+        require_fit: bool = False,
+        retry: Optional[RetryPolicy] = None,
+        injector: Optional[FaultInjector] = None,
+        recovery: Optional[RecoveryPolicy] = None,
+    ) -> str:
+        """Admit (or queue) a tenant. Returns ``"admitted"`` or
+        ``"queued"``.
+
+        ``reserve=None`` reserves the tenant's exact working set
+        (``tenancy.working_set_bytes``) — the latency-class default:
+        once admitted, nothing of its steady state can be stolen. An
+        explicit smaller reserve makes a burst-class (batch) tenant
+        that leans on slack. ``require_fit=True`` additionally rejects
+        a tenant whose working set exceeds its reserve (strict
+        latency-SLO admission). A reserve the unreserved budget cannot
+        cover raises ``AdmissionError`` under ``admission="reject"``
+        or parks the submission under ``admission="queue"`` until
+        running tenants retire."""
+        if name in self.tenants or any(
+            w["name"] == name for w in self.waiting
+        ):
+            raise ValueError(f"duplicate tenant {name!r}")
+        ws = working_set_bytes(cfg, schedule)
+        if reserve is None:
+            reserve = ws
+        reserve = int(reserve)
+        if require_fit and ws > reserve:
+            raise AdmissionError(
+                f"tenant {name!r}: working set {ws} bytes does not fit "
+                f"its reserve {reserve}"
+            )
+        sub: Dict[str, object] = {
+            "name": name, "cfg": cfg,
+            "fields": (p_prev, p_cur, vel2),
+            "schedule": schedule, "sweeps": int(sweeps),
+            "reserve": reserve, "priority": int(priority),
+            "retry": retry, "injector": injector, "recovery": recovery,
+        }
+        if reserve > self.unreserved_bytes():
+            if self.admission == "queue":
+                self.waiting.append(sub)
+                return "queued"
+            raise AdmissionError(
+                f"tenant {name!r}: reserve {reserve} bytes exceeds the "
+                f"unreserved budget {self.unreserved_bytes()} "
+                f"(budget {self.budget_bytes}, reserved "
+                f"{self.arbiter.reserved_total()})"
+            )
+        self._admit(sub)
+        return "admitted"
+
+    def _admit(self, sub: Dict[str, object]) -> None:
+        name = sub["name"]
+        self.arbiter.grant(name, sub["reserve"], sub["priority"])
+        view = TenantView(self.manager, name, router=self._route_flush)
+        p_prev, p_cur, vel2 = sub["fields"]
+        ex = AsyncExecutor(
+            sub["cfg"], p_prev, p_cur, vel2,
+            schedule=sub["schedule"], retry=sub["retry"],
+            injector=sub["injector"], residency=view,
+        )
+        spec = TenantSpec(
+            name, sub["cfg"], sub["schedule"], sub["sweeps"],
+            sub["reserve"], sub["priority"],
+        )
+        run = TenantRun(spec, ex, recovery=sub["recovery"])
+        self.tenants[name] = run
+        rec = run.recovery
+        if rec is not None and ckpt.latest(rec.directory) is None:
+            # a rollback needs a last-good to roll back TO
+            ex.checkpoint(
+                rec.directory, zstd_level=rec.zstd_level, keep=rec.keep
+            )
+
+    def _admit_waiting(self) -> int:
+        admitted = 0
+        still: List[Dict[str, object]] = []
+        for sub in self.waiting:
+            if sub["reserve"] <= self.unreserved_bytes():
+                self._admit(sub)
+                admitted += 1
+            else:
+                still.append(sub)
+        self.waiting = still
+        return admitted
+
+    # ------------------------------------------------------------------
+    # the interleaved run loop
+    # ------------------------------------------------------------------
+    def _route_flush(self, tenant: str, key: Hashable, ent: Entry) -> None:
+        """Cross-tenant flush-on-evict handback: the VICTIM tenant's
+        executor materializes its own dirty payload to its own host
+        store (and logs the flush at its own sweep label)."""
+        self.tenants[tenant].executor._flush_entry(key, ent, -1)
+
+    def _recover(self, run: TenantRun, exc: FaultError) -> None:
+        rec = run.recovery
+        if (
+            rec is None
+            or run.restarts >= rec.max_restarts
+            or ckpt.latest(rec.directory) is None
+        ):
+            raise exc
+        run.restarts += 1
+        # per-tenant rollback: TenantView.rollback_reset drops only
+        # this tenant's residency from the shared manager
+        run.executor._rollback(rec.directory, exc)
+
+    def run(self) -> None:
+        """Drive every admitted tenant to its sweep target, one
+        temporal round per turn in the deterministic
+        ``interleave_rounds`` order (the same global sequence
+        ``build_tenant_tasks`` replays). A faulting tenant with a
+        recovery policy rolls back ALONE and replays its missing
+        rounds before the interleave moves on; everyone else's
+        residency and progress are untouched. When submissions are
+        queued, completed tenants then retire (flush + reserve
+        handback) and the queue re-admits in FIFO order for the next
+        wave."""
+        while True:
+            active = [r for r in self.tenants.values() if not r.done]
+            if active:
+                for tname, s, kr in interleave_rounds(
+                    [r.spec for r in active]
+                ):
+                    run = self.tenants[tname]
+                    target = s + kr
+                    while run.executor.sweeps_done < target:
+                        try:
+                            run.executor.advance_round(target)
+                        except FaultError as e:
+                            self._recover(run, e)
+                for run in active:
+                    run.executor.finish()
+                    run.done = True
+            if not self.waiting:
+                return
+            for run in list(self.tenants.values()):
+                if run.done and not run.retired:
+                    self.retire(run.spec.name)
+            if not self._admit_waiting():
+                raise AdmissionError(
+                    "queued tenants can never be admitted: "
+                    f"{[w['name'] for w in self.waiting]} need more "
+                    f"reserve than the budget frees"
+                )
+
+    def retire(self, name: str) -> None:
+        """Release a completed tenant's device footprint: drain its
+        window, flush its dirty residents to its host store, drop its
+        entries/shadows from the shared manager, and hand its reserve
+        back for queued admissions. The ``TenantRun`` (and its host
+        store) stay addressable for ``gather``."""
+        run = self.tenants[name]
+        run.executor.finish()
+        run.executor.flush()
+        self.manager.drop_tenant(name)
+        self.arbiter.revoke(name)
+        run.retired = True
+
+    # ------------------------------------------------------------------
+    # per-tenant operations
+    # ------------------------------------------------------------------
+    def checkpoint_tenant(self, name: str, directory: str, **kw) -> str:
+        """Quiesced per-tenant checkpoint cut: freezes only ``name``'s
+        version vector (drains its window, flushes its dirty residents
+        — all keyed under its namespace) while every other tenant
+        keeps running. Returns the checkpoint path; restore with
+        ``AsyncExecutor.restore`` as a solo run."""
+        return self.tenants[name].executor.checkpoint(directory, **kw)
+
+    def gather(self, name: str, fieldname: str) -> np.ndarray:
+        return self.tenants[name].executor.gather(fieldname)
+
+    def transfers(self, name: str):
+        return self.tenants[name].executor.transfers
+
+    def specs(self) -> List[TenantSpec]:
+        """The admitted tenants' specs, in admission order — feed these
+        to ``taskgraph.build_tenant_tasks`` / ``pipeline.
+        tenant_timeline`` for the modeled shared-device run."""
+        return [r.spec for r in self.tenants.values()]
+
+    def stats(self) -> Dict[str, object]:
+        """Shared-manager counters plus the per-tenant breakdowns
+        (residency, quota utilization, progress)."""
+        out: Dict[str, object] = {
+            "budget_bytes": self.budget_bytes,
+            "policy": self.policy,
+            "bytes_used": self.manager.bytes_used,
+            "peak_bytes": self.manager.peak_bytes,
+            "reserved_bytes": self.arbiter.reserved_total(),
+            "shared": self.manager.stats.as_dict(),
+        }
+        per: Dict[str, Dict[str, object]] = {}
+        for name, run in self.tenants.items():
+            d = self.manager.tenant_stats_for(name).as_dict()
+            d.update({
+                "bytes_used": self.manager.tenant_bytes.get(name, 0),
+                "peak_bytes": self.manager.tenant_peak.get(name, 0),
+                "reserve": run.spec.reserve,
+                "priority": run.spec.priority,
+                "sweeps_done": run.executor.sweeps_done,
+                "restarts": run.restarts,
+                "retired": run.retired,
+            })
+            per[name] = d
+        out["per_tenant"] = per
+        return out

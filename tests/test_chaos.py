@@ -263,6 +263,85 @@ def test_model_prices_straggle_and_backoff():
     assert faulty.makespan >= base + 2 * 0.5  # two backoff gaps paid
 
 
+# ----------------------------------------------------------------------
+# two-tenant fault band (PR 9): faults + crash in tenant A must
+# neither corrupt nor roll back tenant B on the shared device
+# ----------------------------------------------------------------------
+def _two_tenant_run(plan, tmp_path, *, sweeps_a=4, sweeps_b=3):
+    """Tenant A runs under ``plan`` with a recovery policy; tenant B is
+    clean. One shared scheduler, budget tight enough that the tenants
+    genuinely contend for residency."""
+    from repro.core.tenancy import working_set_bytes
+    from repro.serving.ooc import TenantScheduler
+
+    cfg_a, cfg_b = _cfg(), _cfg()
+    ws_a = working_set_bytes(cfg_a, "depth2")
+    ws_b = working_set_bytes(cfg_b, "temporal2")
+    sched = TenantScheduler(ws_a + ws_b // 2)
+    sched.submit(
+        "A", cfg_a, *_initial(), schedule="depth2", sweeps=sweeps_a,
+        reserve=ws_a, priority=0, retry=RETRY,
+        injector=FaultInjector(plan),
+        recovery=RecoveryPolicy(str(tmp_path), zstd_level=0),
+    )
+    sched.submit(
+        "B", cfg_b, *_initial(), schedule="temporal2", sweeps=sweeps_b,
+        reserve=0, priority=10,
+    )
+    sched.run()
+    return sched
+
+
+def _assert_tenants_isolated(sched, *, sweeps_a=4, sweeps_b=3):
+    """Both tenants bit-identical to solo fault-free runs; B saw no
+    recovery, no replayed sweeps, no corruption."""
+    solo_a = AsyncExecutor(_cfg(), *_initial(), schedule="depth2")
+    solo_a.run(sweeps_a)
+    solo_b = AsyncExecutor(_cfg(), *_initial(), schedule="temporal2")
+    solo_b.run(sweeps_b)
+    for name in FIELDS:
+        np.testing.assert_array_equal(
+            sched.gather("A", name), solo_a.gather(name)
+        )
+        np.testing.assert_array_equal(
+            sched.gather("B", name), solo_b.gather(name)
+        )
+    per = sched.stats()["per_tenant"]
+    assert per["B"]["restarts"] == 0
+    assert per["B"]["recoveries"] == 0
+    assert per["B"]["replayed_sweeps"] == 0
+
+
+def test_two_tenant_crash_rolls_back_alone(tmp_path):
+    """An injected crash in tenant A triggers A's rollback-and-replay;
+    the per-tenant reset drops only A's residency, so B — mid-flight
+    on the same device — neither rolls back nor corrupts."""
+    plan = FaultPlan([
+        FaultSpec(kind="corrupt", op="h2d", field="p_cur", unit="C0",
+                  attempts=1),
+        FaultSpec(kind="crash", sweep=2),
+    ])
+    sched = _two_tenant_run(plan, tmp_path)
+    _assert_tenants_isolated(sched)
+    per = sched.stats()["per_tenant"]
+    assert per["A"]["restarts"] == 1
+    assert per["A"]["recoveries"] == 1
+    assert sum(sched.tenants["A"].executor.injector.counts.values()) > 0
+
+
+@pytest.mark.parametrize("seed", GEN_SEEDS)
+def test_two_tenant_generated_fault_isolated(tmp_path, seed):
+    """The seeded band, two-tenant edition (widened by CHAOS_SEED like
+    the solo matrix): any generated single fault in tenant A leaves
+    both tenants bit-identical to their solo runs and B untouched by
+    the recovery machinery."""
+    plan = FaultPlan.generate(
+        seed, fields=FIELDS, units=UNITS, sweeps=4
+    )
+    sched = _two_tenant_run(plan, tmp_path)
+    _assert_tenants_isolated(sched)
+
+
 # The hypothesis-driven property tier lives in
 # tests/test_chaos_properties.py (module-level importorskip, like
 # tests/test_residency_properties.py) so this deterministic tier runs

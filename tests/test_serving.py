@@ -58,6 +58,30 @@ def test_engine_continuous_batching_overlap():
     assert all(len(v) == 3 for v in done.values())
 
 
+def test_temperature_sampling_renormalized_float64():
+    """Regression: the temperature path must softmax in float64 and
+    renormalize before ``rng.choice``. The float32 softmax it replaces
+    accumulates enough drift on a vocab-sized row to exceed the strict
+    tolerance (~1.49e-8) ``np.random`` applies to float64 ``p`` —
+    ValueError on numpy versions that upcast ``p`` before the check."""
+    eng = ServeEngine(CFG, PARAMS, slots=1, max_len=64,
+                      temperature=0.7, seed=0)
+    rng = np.random.default_rng(23)
+    row = rng.standard_normal(150_000).astype(np.float32)
+    z = row / np.float32(eng.temperature)
+    z = z - z.max()
+    legacy = np.exp(z) / np.exp(z).sum()  # the old float32 pipeline
+    assert abs(float(legacy.sum()) - 1.0) > 1.49e-8  # hazard is real
+    tok = eng._sample(row)
+    assert 0 <= tok < row.size
+    # the fixed pipeline is exactly normalized at float64
+    z64 = row.astype(np.float64) / eng.temperature
+    z64 = z64 - z64.max()
+    prob = np.exp(z64)
+    prob = prob / prob.sum()
+    assert abs(float(prob.sum()) - 1.0) <= 1.49e-8
+
+
 def test_engine_deterministic_sampling():
     eng1 = ServeEngine(CFG, PARAMS, slots=1, max_len=64,
                        temperature=0.8, seed=3)

@@ -1,0 +1,278 @@
+"""Multi-tenant residency arbitration tier (PR 9).
+
+The acceptance bar: N concurrent out-of-core runs multiplexed onto one
+device and ONE shared ``DeviceResidencyManager`` — under adversarial
+interleaving, quota pressure and priority eviction — each finish
+**bit-identical** to their solo runs, and each tenant's live transfer
+multiset (h2d/d2h/flush, with exact flush wire bytes) matches the
+merged task graph ``build_tenant_tasks`` replays from the same pure
+policy. Plus: the reserve floor and priority ordering are enforced
+(a latency tenant with a working-set reserve is never evicted while
+batch bytes remain), admission control rejects/queues what cannot
+fit, and a per-tenant checkpoint cut freezes only that tenant.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.executor import AsyncExecutor
+from repro.core.outofcore import OOCConfig, paper_code_fields
+from repro.core.pipeline import TPU_V5E_HOST, sweep_timeline, tenant_timeline
+from repro.core.taskgraph import build_tenant_tasks
+from repro.core.tenancy import (
+    AdmissionError,
+    TenantSpec,
+    interleave_rounds,
+    working_set_bytes,
+)
+from repro.serving.ooc import TenantScheduler
+
+SHAPE = (32, 8, 8)
+
+
+def _initial(seed):
+    rng = np.random.default_rng(seed)
+    p_prev = rng.standard_normal(SHAPE).astype(np.float32)
+    p_cur = rng.standard_normal(SHAPE).astype(np.float32)
+    vel2 = (1.0 + 0.1 * rng.standard_normal(SHAPE)).astype(np.float32)
+    return p_prev, p_cur, vel2
+
+
+def _cfg(code=2):
+    return OOCConfig(SHAPE, 2, 1, paper_code_fields(code))
+
+
+# (name, schedule, sweeps, priority) — seeds are positional
+TWO = [("A", "depth2", 4, 10), ("B", "temporal2", 3, 0)]
+THREE = [
+    ("A", "unitgrain", 2, 10),
+    ("B", "depth2", 4, 5),
+    ("C", "temporal2", 3, 0),
+]
+SCENARIOS = {"two": TWO, "three": THREE}
+
+
+def _submit_all(tenants, budget_kind):
+    """Build a scheduler for the scenario. ``working`` gives every
+    tenant a full working-set reserve inside a sum-of-working-sets
+    budget; ``tight`` halves the budget and reserves only the
+    highest-priority tenant's floor — the cross-tenant steal regime."""
+    cfgs = {name: _cfg() for name, _, _, _ in tenants}
+    ws = {
+        name: working_set_bytes(cfgs[name], sched)
+        for name, sched, _, _ in tenants
+    }
+    if budget_kind == "working":
+        budget = sum(ws.values())
+        reserves = dict(ws)
+    else:
+        budget = sum(ws.values()) // 2
+        top = max(tenants, key=lambda t: t[3])[0]
+        reserves = {name: ws[name] // 2 if name == top else 0
+                    for name in ws}
+    sched = TenantScheduler(budget)
+    for i, (name, schedule, sweeps, priority) in enumerate(tenants):
+        sched.submit(
+            name, cfgs[name], *_initial(i), schedule=schedule,
+            sweeps=sweeps, reserve=reserves[name], priority=priority,
+        )
+    return sched, budget
+
+
+def _assert_parity(sched, budget):
+    """Per-tenant model/live transfer-multiset parity, including exact
+    flush wire bytes — the single-tenant contract of PRs 2-6, held
+    per tenant under interleaving."""
+    tasks = build_tenant_tasks(sched.specs(), budget_bytes=budget)
+    for name in [s.name for s in sched.specs()]:
+        live = sorted(
+            (t.direction, t.field, t.unit, t.sweep, t.flush,
+             t.wire_bytes if t.flush else None)
+            for t in sched.transfers(name)
+        )
+        graph = sorted(
+            (t.kind, t.field, t.unit, t.sweep, t.flush,
+             int(t.amount) if t.flush else None)
+            for t in tasks
+            if t.tenant == name and t.kind in ("h2d", "d2h")
+        )
+        assert live == graph, f"tenant {name} parity broke"
+
+
+def _assert_solo_identical(sched, tenants):
+    for i, (name, schedule, sweeps, _) in enumerate(tenants):
+        solo = AsyncExecutor(_cfg(), *_initial(i), schedule=schedule)
+        solo.run(sweeps)
+        for field in ("p_cur", "p_prev"):
+            np.testing.assert_array_equal(
+                sched.gather(name, field), solo.gather(field),
+                err_msg=f"tenant {name} field {field} diverged from solo",
+            )
+
+
+@pytest.mark.parametrize("budget_kind", ["working", "tight"])
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_interleaved_tenants_bit_identical_with_parity(
+    scenario, budget_kind
+):
+    """The headline matrix: 2-3 tenants x {unitgrain, depth2,
+    temporal2} x {working-set, tight} budgets. Every tenant must be
+    bit-identical to its solo run AND its live transfer multiset must
+    match the merged graph exactly."""
+    tenants = SCENARIOS[scenario]
+    sched, budget = _submit_all(tenants, budget_kind)
+    sched.run()
+    _assert_parity(sched, budget)
+    _assert_solo_identical(sched, tenants)
+
+
+def test_tight_budget_actually_contends():
+    """Guard the matrix against vacuous passes: the tight two-tenant
+    run must show real cross-tenant evictions of the batch tenant."""
+    sched, _ = _submit_all(TWO, "tight")
+    sched.run()
+    per = sched.stats()["per_tenant"]
+    assert per["B"]["evictions"] > 0
+    assert per["B"]["flushes"] > 0  # dirty victims routed to B's store
+
+
+def test_priority_eviction_spares_latency_tenant():
+    """Reserve + priority: a latency tenant holding a full working-set
+    reserve is NEVER evicted while a batch tenant has stealable bytes;
+    the batch tenant absorbs all the pressure."""
+    cfg = _cfg()
+    ws = working_set_bytes(cfg, "depth2")
+    sched = TenantScheduler(ws + ws // 2)
+    sched.submit("latency", cfg, *_initial(0), schedule="depth2",
+                 sweeps=4, reserve=ws, priority=10)
+    sched.submit("batch", cfg, *_initial(1), schedule="depth2",
+                 sweeps=4, reserve=0, priority=0)
+    sched.run()
+    per = sched.stats()["per_tenant"]
+    assert per["latency"]["evictions"] == 0
+    assert per["batch"]["evictions"] > 0
+    # the latency tenant's steady state stays fully resident
+    assert per["latency"]["peak_bytes"] == ws
+    _assert_solo_identical(
+        sched, [("latency", "depth2", 4, 10), ("batch", "depth2", 4, 0)]
+    )
+
+
+def test_admission_reject_over_reserve():
+    """Hard admission: a reserve that exceeds the unreserved budget is
+    rejected up front (``admission="reject"``), leaving the admitted
+    tenant untouched."""
+    cfg = _cfg()
+    ws = working_set_bytes(cfg, "depth2")
+    sched = TenantScheduler(ws)
+    assert sched.submit("A", cfg, *_initial(0), sweeps=1,
+                        reserve=ws) == "admitted"
+    with pytest.raises(AdmissionError):
+        sched.submit("B", cfg, *_initial(1), sweeps=1, reserve=ws)
+    with pytest.raises(AdmissionError):
+        # require_fit: working set larger than the offered reserve
+        sched.submit("C", cfg, *_initial(2), sweeps=1, reserve=16,
+                     require_fit=True)
+    sched.run()
+
+
+def test_admission_queue_runs_after_retire():
+    """Queued admission: an over-reserve tenant waits, is admitted when
+    the first wave retires, and still finishes bit-identical."""
+    cfg = _cfg()
+    ws = working_set_bytes(cfg, "depth2")
+    sched = TenantScheduler(ws, admission="queue")
+    assert sched.submit("A", cfg, *_initial(0), schedule="depth2",
+                        sweeps=2, reserve=ws) == "admitted"
+    assert sched.submit("B", cfg, *_initial(1), schedule="depth2",
+                        sweeps=2, reserve=ws) == "queued"
+    sched.run()
+    _assert_solo_identical(
+        sched, [("A", "depth2", 2, 0), ("B", "depth2", 2, 0)]
+    )
+    assert sched.stats()["per_tenant"]["A"]["retired"]
+
+
+def test_duplicate_tenant_rejected():
+    cfg = _cfg()
+    sched = TenantScheduler(working_set_bytes(cfg, "depth2"))
+    sched.submit("A", cfg, *_initial(0), sweeps=1)
+    with pytest.raises(ValueError, match="duplicate"):
+        sched.submit("A", cfg, *_initial(1), sweeps=1)
+
+
+def test_per_tenant_checkpoint_cut(tmp_path):
+    """A mid-run checkpoint cut of one tenant freezes only that
+    tenant's version vector: the restored run finishes bit-identical
+    to solo, and the OTHER tenant — which kept mutating through the
+    cut — is untouched."""
+    cfg = _cfg()
+    ws = working_set_bytes(cfg, "depth2")
+    sched = TenantScheduler(2 * ws)
+    sched.submit("A", cfg, *_initial(0), schedule="depth2", sweeps=2,
+                 reserve=ws)
+    sched.submit("B", cfg, *_initial(1), schedule="depth2", sweeps=4,
+                 reserve=ws)
+    cut_path = None
+    for name, start, kr in interleave_rounds(sched.specs()):
+        if name == "A" and start == 1:
+            cut_path = sched.checkpoint_tenant("A", str(tmp_path))
+        sched.tenants[name].executor.advance_round(start + kr)
+    assert cut_path is not None
+    sched.run()  # drains finish() for both
+    # restored A replays its remaining sweep bit-identically
+    restored = AsyncExecutor.restore(cut_path)
+    restored.run(1)
+    soloA = AsyncExecutor(_cfg(), *_initial(0), schedule="depth2")
+    soloA.run(2)
+    np.testing.assert_array_equal(
+        restored.gather("p_cur"), soloA.gather("p_cur")
+    )
+    # B mutated straight through A's cut and stayed correct
+    _assert_solo_identical(sched, [("A", "depth2", 2, 0),
+                                   ("B", "depth2", 4, 0)])
+
+
+def test_quota_accounting_coheres():
+    """Gauge coherence after a contended run: per-tenant byte gauges
+    sum to the manager's, nothing exceeds the budget, and every
+    retired/finished tenant ends with zero dirty bytes."""
+    sched, budget = _submit_all(THREE, "tight")
+    sched.run()
+    mgr = sched.manager
+    assert sum(mgr.tenant_bytes.values()) == mgr.bytes_used
+    assert mgr.bytes_used <= budget
+    st = sched.stats()
+    assert st["reserved_bytes"] <= budget
+    for ts in st["per_tenant"].values():
+        assert ts["peak_bytes"] <= budget
+    # retiring flushes each tenant's dirty residents to ITS store and
+    # zeroes its footprint; reserves come back to the pool
+    for name in list(sched.tenants):
+        sched.retire(name)
+    st = sched.stats()
+    assert st["reserved_bytes"] == 0
+    assert sched.manager.bytes_used == 0
+    for name, ts in st["per_tenant"].items():
+        assert ts["dirty_bytes"] == 0, name
+        assert ts["bytes_used"] == 0, name
+
+
+def test_interleaved_makespan_beats_serial():
+    """The scheduling payoff the bench row reports: the modeled
+    shared-device makespan of the interleaved run beats running the
+    tenants serially (sum of solo timelines) — cross-tenant overlap
+    hides wire time behind another tenant's compute."""
+    specs = [
+        TenantSpec("A", _cfg(), "depth2", sweeps=4, priority=10),
+        TenantSpec("B", _cfg(), "temporal2", sweeps=4),
+    ]
+    ws = sum(working_set_bytes(s.cfg, s.schedule) for s in specs)
+    hw = TPU_V5E_HOST
+    interleaved = tenant_timeline(specs, hw, budget_bytes=ws).makespan
+    serial = sum(
+        sweep_timeline(s.cfg, hw, sweeps=s.sweeps, schedule=s.schedule,
+                       cache_bytes=ws).makespan
+        for s in specs
+    )
+    assert interleaved < serial

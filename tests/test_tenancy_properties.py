@@ -1,0 +1,230 @@
+"""Property-based tests (hypothesis) for multi-tenant residency
+arbitration.
+
+The arbiter-managed manager is a *shared* pure-policy object: the
+merged graph builder replays it to model every tenant's transfers, so
+any accounting drift or grant-order sensitivity silently breaks the
+per-tenant model/live contract. These properties pin the invariants
+under arbitrary interleaved op sequences:
+
+* per-tenant byte gauges always sum to ``bytes_used``, which never
+  exceeds the budget (arbiter mode refuses instead of overflowing);
+* a tenant's deposit can never pull a FOREIGN tenant below its hard
+  reserve (its own activity may);
+* pinned entries are excluded from the stealable slack — an overlapped
+  checkpoint cut in one tenant never loses bytes to another's burst;
+* victim choice is a pure function of the op sequence: quota grant
+  order does not change a single entry, gauge or flush;
+* a per-tenant checkpoint cut at ANY round boundary restores
+  bit-identically while the other tenant keeps mutating through it.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.executor import AsyncExecutor
+from repro.core.outofcore import OOCConfig, paper_code_fields
+from repro.core.tenancy import interleave_rounds, working_set_bytes
+from repro.core.unitcache import DeviceResidencyManager, ResidencyArbiter
+from repro.serving.ooc import TenantScheduler
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=60, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+BUDGET = 150
+TENANTS = ["lat", "bat"]
+QUOTAS = {"lat": (60, 10), "bat": (0, 0)}  # (reserve, priority)
+KEYS = ["a", "b", "c"]
+
+_op = st.one_of(
+    st.tuples(
+        st.just("deposit"),
+        st.sampled_from(TENANTS),
+        st.sampled_from(KEYS),
+        st.integers(0, 3),  # version
+        st.integers(1, 70),  # nbytes
+        st.booleans(),  # dirty
+    ),
+    st.tuples(st.just("lookup"), st.sampled_from(TENANTS),
+              st.sampled_from(KEYS), st.integers(0, 3)),
+    st.tuples(st.just("pin"), st.sampled_from(TENANTS),
+              st.sampled_from(KEYS)),
+    st.tuples(st.just("release"), st.sampled_from(TENANTS),
+              st.sampled_from(KEYS)),
+    st.tuples(st.just("drop"), st.sampled_from(TENANTS)),
+)
+
+
+def _mk(grant_order=TENANTS):
+    arb = ResidencyArbiter()
+    for t in grant_order:
+        arb.grant(t, *QUOTAS[t])
+    return DeviceResidencyManager(BUDGET, arbiter=arb)
+
+
+def _apply(mgr, ops, invariant=None):
+    """Drive an op sequence; return the flush log. ``invariant`` (if
+    given) runs after every op. ``pin`` respects the one-snapshot
+    contract (per namespaced key, as the executor does)."""
+    flushed = []
+    for op in ops:
+        if op[0] == "deposit":
+            _, t, k, ver, nbytes, dirty = op
+            res = mgr.deposit((t, k), ver, f"{t}/{k}@{ver}", nbytes,
+                              dirty=dirty)
+            for key, e in res.flushes:
+                flushed.append((key, e.version, e.nbytes))
+        elif op[0] == "lookup":
+            _, t, k, ver = op
+            mgr.lookup((t, k), ver)
+        elif op[0] == "pin":
+            if (op[1], op[2]) not in mgr._shadows:
+                mgr.pin((op[1], op[2]))
+        elif op[0] == "release":
+            for key, e in mgr.release((op[1], op[2])):
+                flushed.append((key, e.version, e.nbytes))
+        else:  # drop: per-tenant rollback / retire
+            mgr.drop_tenant(op[1])
+        if invariant is not None:
+            invariant(mgr, op)
+    return flushed
+
+
+@given(st.lists(_op, max_size=40))
+def test_quota_gauges_cohere(ops):
+    """Sum of per-tenant gauges == bytes_used <= budget, after every
+    single op; gauges never go negative; peaks are running maxima."""
+
+    def inv(mgr, op):
+        assert sum(mgr.tenant_bytes.values()) == mgr.bytes_used
+        assert 0 <= mgr.bytes_used <= BUDGET
+        for t, b in mgr.tenant_bytes.items():
+            assert b >= 0
+            assert mgr.tenant_peak.get(t, 0) >= b
+
+    _apply(_mk(), ops, invariant=inv)
+
+
+@given(st.lists(_op, max_size=40))
+def test_foreign_deposits_respect_reserves(ops):
+    """No deposit by tenant X may pull tenant Y (!= X) below
+    min(reserve_Y, what Y held before the op)."""
+    mgr = _mk()
+    before = {}
+
+    def inv(mgr, op):
+        if op[0] != "deposit":
+            return
+        depositor = op[1]
+        for t in TENANTS:
+            if t == depositor:
+                continue
+            reserve = QUOTAS[t][0]
+            floor = min(reserve, before.get(t, 0))
+            assert mgr.tenant_bytes.get(t, 0) >= floor, (op, t)
+
+    for op in ops:
+        before = dict(mgr.tenant_bytes)
+        _apply(mgr, [op], invariant=inv)
+
+
+@given(st.lists(_op, max_size=40))
+def test_grant_order_does_not_change_policy(ops):
+    """Victim choice, refusals and gauges are pure functions of the op
+    sequence — shuffling the quota grant order changes nothing."""
+    a, b = _mk(["lat", "bat"]), _mk(["bat", "lat"])
+    fa = _apply(a, ops)
+    fb = _apply(b, ops)
+    assert fa == fb
+    assert list(a._entries) == list(b._entries)
+    assert a.tenant_bytes == b.tenant_bytes
+    assert a.bytes_used == b.bytes_used
+    assert a.stats.as_dict() == b.stats.as_dict()
+
+
+@given(st.lists(_op, max_size=30), st.integers(1, 70))
+def test_pinned_bytes_are_not_stealable(ops, nbytes):
+    """After any op sequence, a burst deposit that can only fit by
+    evicting another tenant's pinned entries is refused — and the
+    refusal disturbs nothing (no partial evictions)."""
+    mgr = _mk()
+    _apply(mgr, ops)
+    # pin everything "lat" holds, then burst "bat" into the remainder
+    for key, e in list(mgr._entries.items()):
+        if key[0] == "lat" and key not in mgr._shadows:
+            mgr.pin(key)
+    pinned = sum(
+        e.nbytes for k, e in mgr._entries.items() if e.pinned
+    )
+    entries_before = dict(mgr._entries)
+    used_before = mgr.bytes_used
+    res = mgr.deposit(("bat", "burst"), 0, "x",
+                      BUDGET - pinned + nbytes, dirty=False)
+    if not res.stored:
+        assert mgr._entries == entries_before
+        assert mgr.bytes_used == used_before
+    else:
+        # it fit without touching pinned bytes
+        assert all(e.pinned is False or k in mgr._entries
+                   for k, e in entries_before.items() if e.pinned)
+        assert mgr.bytes_used <= BUDGET
+
+
+# ----------------------------------------------------------------------
+# executor-level: checkpoint cut at ANY boundary
+# ----------------------------------------------------------------------
+SHAPE = (32, 8, 8)
+
+
+def _initial(seed):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(SHAPE).astype(np.float32),
+            rng.standard_normal(SHAPE).astype(np.float32),
+            (1.0 + 0.1 * rng.standard_normal(SHAPE)).astype(np.float32))
+
+
+@settings(deadline=None, max_examples=8, derandomize=True)
+@given(st.integers(0, 5), st.integers(0, 3))
+def test_checkpoint_any_boundary_restores_bit_identical(
+    cut_at, seed, tmp_path_factory
+):
+    """Cut tenant A's checkpoint at an arbitrary global round boundary
+    while tenant B keeps mutating: the restored run finishes
+    bit-identical to A's solo run, and B is untouched by the cut."""
+    cfg = OOCConfig(SHAPE, 2, 1, paper_code_fields(2))
+    ws = working_set_bytes(cfg, "depth2")
+    sched = TenantScheduler(ws + ws // 2)
+    sched.submit("A", cfg, *_initial(seed), schedule="depth2",
+                 sweeps=3, reserve=ws, priority=10)
+    sched.submit("B", cfg, *_initial(seed + 100), schedule="temporal2",
+                 sweeps=4, reserve=0)
+    rounds = interleave_rounds(sched.specs())
+    cut_path = None
+    tmp = tmp_path_factory.mktemp("cut")
+    for i, (name, start, kr) in enumerate(rounds):
+        if i == min(cut_at, len(rounds) - 1):
+            cut_path = sched.checkpoint_tenant("A", str(tmp))
+            cut_sweeps = sched.tenants["A"].executor.sweeps_done
+        sched.tenants[name].executor.advance_round(start + kr)
+    sched.run()
+    restored = AsyncExecutor.restore(cut_path)
+    restored.run(3 - cut_sweeps)
+    soloA = AsyncExecutor(cfg, *_initial(seed), schedule="depth2")
+    soloA.run(3)
+    np.testing.assert_array_equal(
+        restored.gather("p_cur"), soloA.gather("p_cur")
+    )
+    soloB = AsyncExecutor(cfg, *_initial(seed + 100),
+                          schedule="temporal2")
+    soloB.run(4)
+    np.testing.assert_array_equal(
+        sched.gather("B", "p_cur"), soloB.gather("p_cur")
+    )

@@ -58,6 +58,15 @@ GUARDED_SUFFIXES = (
     "sharded_halo_wire_per_sweep",
     "sharded_modeled_sweep_s",
     "sharded_makespan_ratio",
+    # multi-tenant arbitration (PR 9): both makespans are exact DES
+    # replays of the merged tenant graph; the ratio is the headline
+    # invariant (interleaved < serial) — all lower-is-better, so the
+    # guard catches a scheduling or arbitration regression. Per-tenant
+    # hit rates / quota utilization are recorded but not guarded
+    # (bounded ratios, not lower-is-better trajectories).
+    "tenancy_interleaved_makespan_s",
+    "tenancy_serial_makespan_s",
+    "tenancy_makespan_ratio",
 )
 
 
