@@ -30,9 +30,11 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
     snapshot stalls the sweep loop less than the quiesced one (live
     boundary blocking AND modeled makespan). Later PRs stack their own
     invariants on top — temporal blocking (5), recovery (6), sharding
-    (7) and multi-tenant arbitration (8: the latency tenant's reserve
-    is never evicted and interleaving beats serial). Also records the
-    compression-precision error curve (Fig. 7 trajectory)."""
+    (7), multi-tenant arbitration (8: the latency tenant's reserve
+    is never evicted and interleaving beats serial) and adaptive rate
+    control (9: at an equal error ceiling the adaptive run moves
+    strictly fewer steady-state wire bytes than fixed). Also records
+    the compression-precision error curve (Fig. 7 trajectory)."""
     import pathlib
     import tempfile
 
@@ -502,6 +504,61 @@ def smoke(out_path: str = SMOKE_OUT) -> dict:
     assert per_tenant["latency"]["evictions"] == 0, result["tenancy"]
     assert per_tenant["batch"]["evictions"] > 0, result["tenancy"]
     assert interleaved < serial, result["tenancy"]
+
+    # -- error-budgeted adaptive per-unit rates (PR 10) ----------------
+    # fixed vs adaptive at an equal error ceiling the fixed rate meets
+    # with ~2x slack: the controller spends the slack on cheaper rates
+    # in quiet units (the pulse is localized, so at ndiv=4 the edge
+    # units drop to 6-8 bit planes while wavefront units hold the spec
+    # rate). Steady window starts at sweep 2: sweep 0 writes the
+    # conservative lossless seed, sweep 1 still fetches it.
+    from repro.core.ratecontrol import RateController
+
+    acfg = OOCConfig((96, 12, 12), 4, 2, paper_code_fields(4))
+    ap_cur = np.asarray(
+        stencil_ref.ricker_source((96, 12, 12)), np.float32
+    )
+    ap_prev = 0.95 * ap_cur
+    avel2 = np.full((96, 12, 12), 0.07, np.float32)
+    asweeps, aceiling = 6, 5e-2
+    afixed = AsyncExecutor(
+        acfg, ap_prev, ap_cur, avel2, schedule="depth2"
+    )
+    afixed.run(asweeps * acfg.bt)
+    actrl = RateController(
+        acfg, mode="adaptive", error_budget=aceiling, margin=0.5
+    )
+    aadapt = AsyncExecutor(
+        acfg, ap_prev, ap_cur, avel2, schedule="depth2", rates=actrl
+    )
+    aadapt.run(asweeps * acfg.bt)
+
+    def _steady_wire(eng):
+        return sum(
+            t.wire_bytes for t in eng.transfers if t.sweep >= 2
+        ) // (asweeps - 2)
+
+    fixed_wire = _steady_wire(afixed)
+    adapt_wire = _steady_wire(aadapt)
+    result["adaptive_rates"] = {
+        "config": {
+            "shape": (96, 12, 12), "ndiv": 4, "bt": 2,
+            "sweeps": asweeps, "error_budget": aceiling,
+            "margin": 0.5, "schedule": "depth2",
+        },
+        "fixed_steady_wire_per_sweep": fixed_wire,
+        "adaptive_steady_wire_per_sweep": adapt_wire,
+        "adaptive_wire_ratio": round(adapt_wire / fixed_wire, 4),
+        "adaptive_max_observed_rel": round(actrl.max_observed_rel, 6),
+        "rate_histogram": actrl.rate_histogram(aadapt.plan, asweeps),
+        "decides": actrl.decides,
+    }
+    # invariant 9 (PR 10): at an equal error ceiling the adaptive run
+    # moves strictly fewer steady-state wire bytes per sweep than the
+    # fixed-rate run, while every observed per-encode relative error
+    # stays under the ceiling
+    assert adapt_wire < fixed_wire, result["adaptive_rates"]
+    assert actrl.max_observed_rel <= aceiling, result["adaptive_rates"]
 
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)

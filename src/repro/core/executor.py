@@ -111,6 +111,7 @@ import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.core.outofcore import HostUnitStore, OOCConfig, unit_shards
+from repro.core.ratecontrol import RateController, rate_label
 from repro.core.taskgraph import (
     Schedule,
     Task,
@@ -257,6 +258,13 @@ def _payload_raw_bytes(value) -> int:
     return int(value.size) * value.dtype.itemsize
 
 
+def _payload_rate(value) -> str:
+    """Rate label of a device payload for the per-rate byte gauges."""
+    return rate_label(
+        value.planes if isinstance(value, Compressed) else None
+    )
+
+
 class AsyncExecutor:
     """Executes the shared out-of-core task graph with a bounded
     in-flight window that spans sweep boundaries, deferred (overlapped)
@@ -276,6 +284,7 @@ class AsyncExecutor:
         injector: Optional[FaultInjector] = None,
         shard: Optional["ShardSpec"] = None,
         residency=None,
+        rates=None,
     ):
         """Build a live executor over ``cfg``.
 
@@ -338,6 +347,15 @@ class AsyncExecutor:
             manager, so N runs compete for one budget under quota/
             priority arbitration. ``cache_bytes``/``policy`` are
             ignored when this is given (the view carries both).
+        rates:
+            Optional ``repro.core.ratecontrol.RateController``: each
+            unit encodes at its own per-sweep rate (rate ``None`` =
+            raw/lossless), the controller observes every writeback's
+            round-trip error, and re-decides at sweep boundaries. The
+            rate map is persisted in checkpoints and restored
+            bit-identically. ``mode="fixed"`` is bit-identical to not
+            passing a controller. Not composable with ``shard`` yet
+            (halo exports stay spec-rate).
         """
         self.cfg = cfg
         self.schedule = get_schedule(schedule)
@@ -367,9 +385,16 @@ class AsyncExecutor:
             residency if residency is not None
             else DeviceResidencyManager(cache_bytes, policy=policy)
         )
+        if rates is not None and shard is not None:
+            raise ValueError(
+                "rate control does not compose with sharding yet "
+                "(halo exports are spec-rate); use mode='fixed' "
+                "semantics by passing rates=None"
+            )
+        self.rates = rates
         self.store = HostUnitStore(
             cfg, plan=self.plan, injector=injector, retry=self.retry,
-            stats=self.cache.stats,
+            stats=self.cache.stats, rates=rates,
         )
         seeds = (p_prev, p_cur, vel2)
         if any(s is not None for s in seeds):
@@ -565,7 +590,11 @@ class AsyncExecutor:
         if self.cache.enabled and self.cfg.fields[task.field].role != "rw":
             # never written back: deposit the fetched payload so later
             # sweeps hit (rw fields deposit at writeback instead)
-            res = self.cache.deposit(key, ver, dev, wire)
+            res = self.cache.deposit(
+                key, ver, dev, wire,
+                rate=_payload_rate(dev) if self.rates is not None
+                else None,
+            )
             for ekey, eent in res.flushes:
                 self._flush_entry(ekey, eent, task.block)
         self.transfers.append(Transfer(
@@ -579,7 +608,13 @@ class AsyncExecutor:
         keeps the executor on the same code path as gather)."""
         if not tasks:
             return
-        keys = [(t.field, t.unit) for t in tasks]
+        # under adaptive rates a unit whose current payload is raw
+        # (rate None / lossless) arrives in _dev, not _staged — its
+        # template decompress task has nothing to decode
+        keys = [
+            k for k in ((t.field, t.unit) for t in tasks)
+            if k in self._staged
+        ]
         decoded = zfp_ops.decompress_units(
             [self._staged.pop(k) for k in keys],
             backend=self.cfg.backend,
@@ -662,16 +697,46 @@ class AsyncExecutor:
 
     def _exec_compress(self, tasks: List[Task]) -> None:
         """Encode a visit's writeback units via the batched entry point
-        (one dispatch burst; units ship as each finishes)."""
+        (one dispatch burst; units ship as each finishes).
+
+        With a ``RateController`` each unit encodes at its own live
+        rate for the round (``rate_for`` at the round-start sweep —
+        the same value the graph builder replays); rate-``None`` units
+        skip the codec and commit raw, and every encode feeds the
+        controller one observation (measured round-trip error at the
+        actual rate, and the unit's amplitude)."""
         by_planes: Dict[int, List[Task]] = {}
         for t in tasks:
-            planes = self.cfg.fields[t.field].planes
+            kind, idx = t.unit
+            if self.rates is not None:
+                planes = self.rates.rate_for(
+                    t.field, kind, idx, self.sweeps_done
+                )
+            else:
+                planes = self.cfg.fields[t.field].planes
+            if planes is None:
+                # lossless commit: the raw array ships as-is, error 0
+                val = self._outvals[(t.field, t.unit)]
+                self.rates.observe(
+                    t.field, kind, idx, None, 0.0,
+                    float(jnp.max(jnp.abs(val))),
+                )
+                continue
             by_planes.setdefault(planes, []).append(t)
         for planes, ts in by_planes.items():
+            vals = [self._outvals[(t.field, t.unit)] for t in ts]
             encoded = zfp_ops.compress_units(
-                [self._outvals[(t.field, t.unit)] for t in ts],
-                planes=planes, ndim=3, backend=self.cfg.backend,
+                vals, planes=planes, ndim=3, backend=self.cfg.backend,
             )
+            if self.rates is not None:
+                for t, v in zip(ts, vals):
+                    kind, idx = t.unit
+                    q = zfp_ops.quantize(v, planes=planes, ndim=3)
+                    self.rates.observe(
+                        t.field, kind, idx, planes,
+                        float(jnp.max(jnp.abs(q - v))),
+                        float(jnp.max(jnp.abs(v))),
+                    )
             for t, c in zip(ts, encoded):
                 self._outvals[(t.field, t.unit)] = c
 
@@ -711,16 +776,23 @@ class AsyncExecutor:
             self._ver[key] = ver
             if self.cache.enabled:
                 nbytes = _payload_nbytes(val)
-                res = self.cache.deposit(key, ver, val, nbytes,
-                                         dirty=True, bumps=kr)
+                res = self.cache.deposit(
+                    key, ver, val, nbytes, dirty=True, bumps=kr,
+                    rate=_payload_rate(val) if self.rates is not None
+                    else None,
+                )
                 for ekey, eent in res.flushes:
                     self._flush_entry(ekey, eent, t.block)
                 if res.stored and self.cache.write_back:
-                    # payload sizes are constant across versions
-                    # (fixed-rate codec), so a stored deposit can never
-                    # be displaced by a refusal: this writeback will
-                    # never pay its own D2H — account the elision now,
-                    # in lockstep with the graph builder
+                    # stored means committed: the manager drops the
+                    # superseded entry before its budget check, so
+                    # even when adaptive rates change a unit's payload
+                    # size across versions, whether THIS deposit is
+                    # stored depends only on the new payload and the
+                    # budget — a stored deposit can never be displaced
+                    # by a refusal, and this writeback will never pay
+                    # its own D2H. Account the elision now, in
+                    # lockstep with the graph builder.
                     self.cache.note_d2h_elided(nbytes)
             parked.append((t, val, raw, ver))
         if parked:
@@ -790,6 +862,12 @@ class AsyncExecutor:
             self._held_out = {n: held[n + str(last)] for n in rw}
         assert not self._dev and not self._staged and not self._outvals
         self.sweeps_done += kr
+        if self.rates is not None:
+            # sweep boundary: re-decide the rate map from this round's
+            # observations (applies from the next sweep on) — the same
+            # point the synchronous engine decides, so both engines
+            # record identical decision logs
+            self.rates.decide(self.sweeps_done)
 
     def finish(self) -> None:
         """Drain the window: every issued writeback is *committed* —
@@ -1063,6 +1141,13 @@ class AsyncExecutor:
                     if self.shard is not None else None
                 ),
             },
+            # adaptive rate control: the full policy snapshot (decision
+            # log + pending observations), restored bit-identically so
+            # a resumed run re-decides exactly what this one would have
+            **(
+                {"rates": self.rates.state_dict()}
+                if self.rates is not None else {}
+            ),
         }
 
     def _early_commit_parked(self) -> None:
@@ -1423,8 +1508,13 @@ class AsyncExecutor:
                     temporal=spec.get("temporal", 1),
                 )
         shard_d = prog.get("shard")
+        cfg = OOCConfig.from_dict(extra["cfg"])
+        rates = (
+            RateController.from_state(cfg, extra["rates"])
+            if "rates" in extra else None
+        )
         ex = cls(
-            OOCConfig.from_dict(extra["cfg"]),
+            cfg,
             schedule=schedule,
             cache_bytes=(
                 prog["cache_bytes"] if cache_bytes is None
@@ -1436,6 +1526,7 @@ class AsyncExecutor:
                 ShardSpec.from_dict(shard_d, device=device)
                 if shard_d else None
             ),
+            rates=rates,
         )
         ex.store.load_state(leaves, extra["store"])
         ex.sweeps_done = int(prog["sweeps_done"])

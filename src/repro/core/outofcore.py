@@ -274,8 +274,13 @@ class HostUnitStore:
         injector: Optional[FaultInjector] = None,
         retry: Optional[RetryPolicy] = None,
         stats=None,
+        rates=None,
     ):
         self.cfg = cfg
+        # optional RateController: when attached, ``seed`` encodes each
+        # unit at its per-unit sweep-0 rate instead of the field spec's
+        # (rate None = store raw / lossless)
+        self.rates = rates
         # the unit layout this store is decomposed under — a temporal-k
         # engine passes its halo-widened plan (same cover, wider
         # commons); default is the config's base plan
@@ -601,8 +606,17 @@ class HostUnitStore:
                      for kind, idx, (lo, hi) in plan.units()
                      if keep is None or (kind, idx) in keep]
             if spec.compressed:
+                if self.rates is not None:
+                    # per-unit sweep-0 rates (None entries pass through
+                    # raw = lossless)
+                    per_unit = [
+                        self.rates.rate_for(name, k, i, 0)
+                        for k, i, _ in units
+                    ]
+                else:
+                    per_unit = spec.planes
                 comp = zfp_ops.compress_units(
-                    [u for _, _, u in units], planes=spec.planes, ndim=3,
+                    [u for _, _, u in units], planes=per_unit, ndim=3,
                     backend=cfg.backend,
                 )
                 units = [(k, i, c) for (k, i, _), c in zip(units, comp)]
@@ -701,12 +715,16 @@ class OutOfCoreWave:
         p_cur: np.ndarray,
         vel2: np.ndarray,
         temporal: int = 1,
+        rates=None,
     ):
         self.cfg = cfg
         self.temporal = temporal
         self.plan = cfg.temporal_plan(temporal)
         self.plan.check_cover()
-        self.store = HostUnitStore(cfg, plan=self.plan)
+        # optional RateController: per-unit encode rates (adaptive or
+        # pinned-lossless); None keeps the fixed spec-rate paths
+        self.rates = rates
+        self.store = HostUnitStore(cfg, plan=self.plan, rates=rates)
         self.transfers: List[Transfer] = []
         self.sweeps_done = 0
         self.store.seed({"p_prev": p_prev, "p_cur": p_cur, "vel2": vel2})
@@ -731,12 +749,29 @@ class OutOfCoreWave:
         spec = self.cfg.fields[name]
         raw = int(value.size) * value.dtype.itemsize
         ver = self.store.version_of(name, kind, idx) + bump
-        if spec.compressed:
+        if self.rates is not None:
+            planes = self.rates.rate_for(name, kind, idx, sweep)
+        else:
+            planes = spec.planes if spec.compressed else None
+        if planes is not None:
             comp = zfp_ops.compress(
-                value, planes=spec.planes, ndim=3, backend=self.cfg.backend
+                value, planes=planes, ndim=3, backend=self.cfg.backend
             )
+            if self.rates is not None and spec.compressed:
+                q = zfp_ops.quantize(value, planes=planes, ndim=3)
+                self.rates.observe(
+                    name, kind, idx, planes,
+                    float(jnp.max(jnp.abs(q - value))),
+                    float(jnp.max(jnp.abs(value))),
+                )
             wire = self.store.put(name, kind, idx, comp, version=ver)
         else:
+            if self.rates is not None and spec.compressed:
+                # lossless commit: zero error at the unit's amplitude
+                self.rates.observe(
+                    name, kind, idx, None, 0.0,
+                    float(jnp.max(jnp.abs(value))),
+                )
             wire = self.store.put(name, kind, idx, value, version=ver)
         self.transfers.append(
             Transfer("d2h", name, (kind, idx), raw, wire, sweep, block)
@@ -813,6 +848,10 @@ class OutOfCoreWave:
                     held[name + str(i)] = owned[b - h : b]
             shared = {n: new_shared.get(n) for n in cfg.fields}
         self.sweeps_done += kr
+        if self.rates is not None:
+            # sweep boundary: re-decide the rate map from this round's
+            # observations; the new map applies from the next sweep on
+            self.rates.decide(self.sweeps_done)
 
     def run(self, total_steps: int) -> None:
         assert total_steps % self.cfg.bt == 0

@@ -370,6 +370,7 @@ def sweep_timeline(
     reissue: Optional[ReissuePolicy] = None,
     retry: Optional[RetryPolicy] = None,
     faults: Optional[FaultPlan] = None,
+    rates=None,
 ) -> Timeline:
     """Replay ``sweeps`` sweeps of ``cfg`` under ``schedule`` on ``hw``.
 
@@ -391,12 +392,18 @@ def sweep_timeline(
     schedule buys. ``reissue`` prices the spare-stream straggler
     mitigation on all transfer tasks, snapshot flushes included.
     ``retry``/``faults`` price a deterministic ``FaultPlan`` with
-    bounded-retry semantics (see ``simulate``)."""
+    bounded-retry semantics (see ``simulate``).
+
+    ``rates`` (a ``RateController``) replays per-unit adaptive encode
+    rates with exact heterogeneous wire pricing — pass a finished
+    run's controller to price the rate schedule it actually used, or a
+    candidate controller to let the DES search rate schedules offline
+    (see ``build_sweep_tasks``)."""
     return simulate(
         build_sweep_tasks(
             cfg, sweeps=sweeps, schedule=schedule,
             cache_bytes=cache_bytes, stats=stats, policy=policy,
-            ckpt_every=ckpt_every, ckpt_mode=ckpt_mode,
+            ckpt_every=ckpt_every, ckpt_mode=ckpt_mode, rates=rates,
         ), hw, reissue=reissue, retry=retry, faults=faults,
     )
 

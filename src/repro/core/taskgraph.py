@@ -64,6 +64,7 @@ import re
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple, Union
 
+from repro.core.ratecontrol import rate_label
 from repro.core.unitcache import UnitCache
 from repro.kernels.zfp import ref as zfp_ref
 
@@ -220,15 +221,16 @@ def wire_ratio(spec, itemsize: int) -> float:
     return zfp_ref.bits_per_value(3, spec.planes) / (8 * itemsize)
 
 
-def unit_wire_bytes(
-    spec, shape: Tuple[int, int, int], itemsize: int
+def rate_wire_bytes(
+    planes: Optional[int], shape: Tuple[int, int, int], itemsize: int
 ) -> int:
-    """Exact on-wire bytes of one stored unit — for compressed fields
-    the actual ``Compressed.nbytes()`` (uint32 payload words after the
-    pad-to-4 blockify, plus the 2-byte emax header per block), so the
-    modeled unit cache budgets the same numbers the live executor
-    deposits."""
-    if not spec.compressed:
+    """Exact on-wire bytes of one unit encoded at ``planes`` bit-planes
+    (``None`` = raw/lossless): the actual ``Compressed.nbytes()``
+    (uint32 payload words after the pad-to-4 blockify, plus the 2-byte
+    emax header per block). The pricing primitive of the adaptive-rate
+    replay: the modeled residency manager budgets the same
+    heterogeneous payload sizes the live executor deposits."""
+    if planes is None:
         n = 1
         for s in shape:
             n *= s
@@ -236,8 +238,18 @@ def unit_wire_bytes(
     nb = 1
     for s in shape:
         nb *= -(-s // 4)
-    words = zfp_ref.payload_words(3, spec.planes, 8 * itemsize)
+    words = zfp_ref.payload_words(3, int(planes), 8 * itemsize)
     return nb * (words * 4 + 2)
+
+
+def unit_wire_bytes(
+    spec, shape: Tuple[int, int, int], itemsize: int
+) -> int:
+    """Exact on-wire bytes of one stored unit at its field spec's
+    fixed rate — ``rate_wire_bytes`` at ``spec.planes``."""
+    return rate_wire_bytes(
+        spec.planes if spec.compressed else None, shape, itemsize
+    )
 
 
 def build_sweep_tasks(
@@ -251,6 +263,7 @@ def build_sweep_tasks(
     ckpt_mode: str = "overlapped",
     shard=None,
     resource_prefix: str = "",
+    rates=None,
 ) -> List[Task]:
     """Tasks for ``sweeps`` consecutive sweeps of the out-of-core engine,
     mirroring the engines' fetch/compute/writeback structure (units
@@ -340,6 +353,20 @@ def build_sweep_tasks(
     ``resource_prefix`` namespaces every task's resource (e.g.
     ``"s1:"`` makes ``s1:h2d``/``s1:compute``/...), giving each shard
     its own stream set in a merged multi-device replay.
+
+    ``rates`` (a ``repro.core.ratecontrol.RateController``) replays
+    per-unit adaptive encode rates: every fetch and writeback is priced
+    at the EXACT encoded payload size of the unit's current rate
+    (``rate_wire_bytes``), rate-``None`` units skip their codec tasks
+    (raw/lossless crossings), and residency deposits carry the rate
+    label for the per-rate byte gauges — so model and live agree
+    transfer-for-transfer on the heterogeneous wire bytes at every
+    budget. Pass the live run's controller (its decision log) to model
+    that run, or a ``mode="fixed"`` controller for spec rates. Without
+    ``rates`` the legacy pricing (``wire_ratio`` on the wire,
+    ``unit_wire_bytes`` in the residency model) is byte-identical to
+    PR 9. Sharded halo exports always price at the field spec's rate —
+    rate control composes with sharding only in fixed mode for now.
     """
     if ckpt_mode not in ("overlapped", "quiesced"):
         raise ValueError(
@@ -398,6 +425,23 @@ def build_sweep_tasks(
     def exact_nbytes(spec, kind: str, idx: int) -> int:
         return unit_wire_bytes(
             spec, (unit_planes(kind, idx), y, x), itemsize
+        )
+
+    # adaptive-rate replay: the rate each unit's CURRENT payload was
+    # encoded at (what the next fetch crosses the wire as), lazily
+    # seeded at the controller's sweep-0 rate and updated by every
+    # writeback's rate_for decision
+    enc_rate: Dict[Tuple[str, Tuple[str, int]], Optional[int]] = {}
+
+    def unit_rate(name: str, kind: str, idx: int) -> Optional[int]:
+        key = (name, (kind, idx))
+        if key not in enc_rate:
+            enc_rate[key] = rates.rate_for(name, kind, idx, 0)
+        return enc_rate[key]
+
+    def rate_nbytes(kind: str, idx: int, r: Optional[int]) -> int:
+        return rate_wire_bytes(
+            r, (unit_planes(kind, idx), y, x), itemsize
         )
 
     prev_compute = None
@@ -490,13 +534,24 @@ def build_sweep_tasks(
                     key = (name, (kind, idx))
                     ver = version.get(key, 0)
                     raw = unit_planes(kind, idx) * plane_bytes
-                    wire = raw * wire_ratio(spec, itemsize)
+                    if rates is not None:
+                        # exact pricing at the rate the unit's current
+                        # payload was encoded at; rate None arrives
+                        # raw, so it needs no decompress task
+                        r = (unit_rate(name, kind, idx)
+                             if spec.compressed else None)
+                        wire = rate_nbytes(kind, idx, r)
+                        encoded = r is not None
+                    else:
+                        r = None
+                        wire = raw * wire_ratio(spec, itemsize)
+                        encoded = spec.compressed
                     hit = False
                     if cache.enabled:
                         hit, _ = cache.lookup(key, ver)
                     if hit:
                         h2d_elided += 1
-                        if spec.compressed:
+                        if encoded:
                             ddep = deposit_of.get(key)
                             dec_ids.append(add(
                                 f"{pre}.dec.{name}.{kind}{idx}",
@@ -519,15 +574,23 @@ def build_sweep_tasks(
                     h2d_ids.append(tid)
                     if spec.role != "rw" and cache.enabled:
                         # never written back: cache the fetched payload
-                        res = cache.deposit(
-                            key, ver, None, exact_nbytes(spec, kind, idx)
-                        )
+                        if rates is not None:
+                            res = cache.deposit(
+                                key, ver, None,
+                                rate_nbytes(kind, idx, r),
+                                rate=rate_label(r),
+                            )
+                        else:
+                            res = cache.deposit(
+                                key, ver, None,
+                                exact_nbytes(spec, kind, idx),
+                            )
                         deposit_of[key] = tid
                         for ekey, eent in res.flushes:
                             fetch_flushes.append(
                                 flush_task(ekey, eent, pre, i, s)
                             )
-                    if spec.compressed:
+                    if encoded:
                         dec_ids.append(add(
                             f"{pre}.dec.{name}.{kind}{idx}", "compute",
                             "decompress", raw, (tid,), i, sync=True,
@@ -574,9 +637,22 @@ def build_sweep_tasks(
                     ver = version.get(key, 0) + kr
                     version[key] = ver
                     raw = unit_planes(kind, idx) * plane_bytes
-                    wire = raw * wire_ratio(spec, itemsize)
+                    if rates is not None:
+                        # this round's rate decision (the live engines
+                        # consult rate_for at the same round-start
+                        # sweep s); rate None commits raw = lossless,
+                        # with no compress task
+                        r = (rates.rate_for(name, kind, idx, s)
+                             if spec.compressed else None)
+                        enc_rate[key] = r
+                        wire = rate_nbytes(kind, idx, r)
+                        do_comp = r is not None
+                    else:
+                        r = None
+                        wire = raw * wire_ratio(spec, itemsize)
+                        do_comp = spec.compressed
                     dep: Tuple[str, ...] = (prev_compute,)
-                    if spec.compressed:
+                    if do_comp:
                         dep = (add(
                             f"{pre}.comp.{name}.{kind}{idx}", "compute",
                             "compress", raw, dep, i, sync=True,
@@ -604,18 +680,28 @@ def build_sweep_tasks(
                         # deposits dirty: a stored deposit's d2h never
                         # happens as its own task (the version commits
                         # on device; the bytes move only in a flush).
-                        res = cache.deposit(
-                            key, ver, None,
-                            exact_nbytes(spec, kind, idx), dirty=True,
-                            bumps=kr,
-                        )
+                        # Payload sizes may differ across versions
+                        # under adaptive rates; the manager drops the
+                        # superseded entry before its budget check, so
+                        # this replay stays in lockstep with the live
+                        # deposits.
+                        if rates is not None:
+                            nb = rate_nbytes(kind, idx, r)
+                            res = cache.deposit(
+                                key, ver, None, nb, dirty=True,
+                                bumps=kr, rate=rate_label(r),
+                            )
+                        else:
+                            nb = exact_nbytes(spec, kind, idx)
+                            res = cache.deposit(
+                                key, ver, None, nb, dirty=True,
+                                bumps=kr,
+                            )
                         deposit_of[key] = dep[0]
                         for ekey, eent in res.flushes:
                             last_d2h = flush_task(ekey, eent, pre, i, s)
                         if res.stored and cache.write_back:
-                            cache.note_d2h_elided(
-                                exact_nbytes(spec, kind, idx)
-                            )
+                            cache.note_d2h_elided(nb)
                             continue
                     d2h_tasks += 1
                     last_d2h = add(

@@ -217,10 +217,11 @@ class TenantView:
         nbytes: int,
         dirty: bool = False,
         bumps: int = 0,
+        rate: Optional[str] = None,
     ) -> DepositResult:
         res = self.manager.deposit(
             self._key(key), version, value, nbytes, dirty=dirty,
-            bumps=bumps,
+            bumps=bumps, rate=rate,
         )
         return DepositResult(res.stored, self._split(res.flushes))
 

@@ -66,14 +66,24 @@ order, which the tests assert transfer-by-transfer.
 
 Entries are versioned: ``deposit`` records the unit version the payload
 corresponds to and ``lookup`` only hits when the cached version equals
-the requested (current) one. Payload sizes are constant across versions
-(fixed-rate codec), so a deposit that was stored once is never later
-refused — the invariant that lets both consumers decide "this writeback
-will never pay its own D2H" at deposit time (``note_d2h_elided``).
-Replacing a key's dirty entry with a newer version drops the old
-payload silently: the superseded bytes can never be needed again (the
-host only ever serves the *newest* committed version, whose data is
-either resident here or still parked in the executor's window).
+the requested (current) one. Payload sizes may differ across versions
+(adaptive rate control re-encodes a unit at a different ZFP rate), so
+``deposit`` drops the superseded entry *before* checking whether the
+new payload fits: whether a writeback is stored depends only on the
+budget, the new payload's size, and what else is resident — never on
+the size history of the key being replaced. Builder and live executor
+therefore stay in lockstep on mixed-size payloads, and both can still
+decide "this writeback will never pay its own D2H" at deposit time
+(``note_d2h_elided``). Replacing a key's dirty entry with a newer
+version drops the old payload silently: the superseded bytes can never
+be needed again (the host only ever serves the *newest* committed
+version, whose data is either resident here or still parked in the
+executor's window).
+
+Entries optionally carry a ``rate`` label (``"p12"``, ``"raw"``, ...);
+``CacheStats.rate_bytes`` gauges resident bytes per label so mixed-rate
+runs can see where the budget goes. Legacy callers that never pass a
+label leave the gauge empty.
 
 Values are opaque (device arrays / ``Compressed`` handles in the
 executor, ``None`` in the graph builder's model), and ``nbytes`` is
@@ -191,6 +201,11 @@ class CacheStats:
     # halo traffic on its own
     halo_count: int = 0  # halo payloads shipped to a neighbor shard
     halo_wire_bytes: int = 0  # link bytes those halo crossings paid
+    # per-rate resident-byte gauges (PR 10, adaptive rate control):
+    # bytes currently held per rate label ("p12", "raw", ...); only
+    # populated when deposits carry a rate label, so legacy paths keep
+    # an empty dict
+    rate_bytes: Dict[str, int] = field(default_factory=dict)
 
     @property
     def lookups(self) -> int:
@@ -232,6 +247,7 @@ class CacheStats:
             "replayed_sweeps": self.replayed_sweeps,
             "halo_count": self.halo_count,
             "halo_wire_bytes": self.halo_wire_bytes,
+            "rate_bytes": dict(self.rate_bytes),
             "hit_rate": self.hit_rate,
         }
 
@@ -245,6 +261,9 @@ class Entry:
     # pinned by an in-flight overlapped checkpoint cut: the payload
     # must survive (shadowed, never evicted) until release()
     pinned: bool = False
+    # rate label of the payload ("p12", "raw", ...) for the per-rate
+    # byte gauges; None when the depositor doesn't track rates
+    rate: Optional[str] = None
 
 
 @dataclass
@@ -387,6 +406,19 @@ class DeviceResidencyManager:
         vs materialize."""
         return self._entries.get(key)
 
+    def _rate_account(self, ent: Entry, delta: int) -> None:
+        """Move ``delta`` bytes in the per-rate gauge for ``ent``'s
+        label; keys reaching zero are removed so the dict only names
+        rates actually resident."""
+        if ent.rate is None:
+            return
+        rb = self.stats.rate_bytes
+        new = rb.get(ent.rate, 0) + delta
+        if new:
+            rb[ent.rate] = new
+        else:
+            rb.pop(ent.rate, None)
+
     def deposit(
         self,
         key: Hashable,
@@ -395,6 +427,7 @@ class DeviceResidencyManager:
         nbytes: int,
         dirty: bool = False,
         bumps: int = 0,
+        rate: Optional[str] = None,
     ) -> DepositResult:
         """Insert/replace the unit's payload at ``version`` (MRU),
         evicting LRU entries until the budget holds. ``dirty`` marks
@@ -409,7 +442,13 @@ class DeviceResidencyManager:
         writeback deposit, ``0`` for a read-only fetch deposit. It is
         pure accounting (``CacheStats.version_bumps``): one fused
         visit counts as ONE deposit however many sweeps it carries,
-        and the bump counter is what scales with simulated time."""
+        and the bump counter is what scales with simulated time.
+
+        ``rate`` optionally labels the payload's encoding rate
+        (``"p12"``, ``"raw"``, ...) for ``CacheStats.rate_bytes``;
+        payload sizes may differ across versions of the same key
+        (adaptive rate control), which is why the superseded entry is
+        dropped *before* the budget check below."""
         ts = self._tstats(key)
         self.stats.version_bumps += int(bumps)
         if ts is not None:
@@ -457,9 +496,11 @@ class DeviceResidencyManager:
                     ts.refusals += 1
                 return DepositResult(False)
             flushes = self._commit_evictions(victims)
-        self._entries[key] = Entry(version, value, int(nbytes), dirty)
+        ent = Entry(version, value, int(nbytes), dirty, rate=rate)
+        self._entries[key] = ent
         self.bytes_used += int(nbytes)
         self.peak_bytes = max(self.peak_bytes, self.bytes_used)
+        self._rate_account(ent, int(nbytes))
         self._taccount(key, int(nbytes))
         self.stats.deposits += 1
         if ts is not None:
@@ -494,6 +535,7 @@ class DeviceResidencyManager:
                 break  # everything resident is pinned: over-budget
             ent = self._entries.pop(victim)
             self.bytes_used -= ent.nbytes
+            self._rate_account(ent, -ent.nbytes)
             self.stats.evictions += 1
             if ent.dirty:
                 # flush-on-evict: residency lost, the caller pays the
@@ -560,6 +602,7 @@ class DeviceResidencyManager:
         for victim in victims:
             ent = self._entries.pop(victim)
             self.bytes_used -= ent.nbytes
+            self._rate_account(ent, -ent.nbytes)
             self._taccount(victim, -ent.nbytes)
             ts = self._tstats(victim)
             self.stats.evictions += 1
@@ -681,6 +724,7 @@ class DeviceResidencyManager:
         shadow = self._shadows.pop(key, None)
         if shadow is not None:
             self.bytes_used -= shadow.nbytes
+            self._rate_account(shadow, -shadow.nbytes)
             self._taccount(key, -shadow.nbytes)
             self.stats.pinned_bytes -= shadow.nbytes
             self.stats.pin_releases += 1
@@ -733,6 +777,7 @@ class DeviceResidencyManager:
         for k in [k for k in self._entries if k[0] == tenant]:
             ent = self._entries.pop(k)
             self.bytes_used -= ent.nbytes
+            self._rate_account(ent, -ent.nbytes)
             if ent.dirty:
                 self.stats.dirty_bytes -= ent.nbytes
                 if ts is not None:
@@ -744,6 +789,7 @@ class DeviceResidencyManager:
         for k in [k for k in self._shadows if k[0] == tenant]:
             shadow = self._shadows.pop(k)
             self.bytes_used -= shadow.nbytes
+            self._rate_account(shadow, -shadow.nbytes)
             self.stats.pinned_bytes -= shadow.nbytes
             if ts is not None:
                 ts.pinned_bytes -= shadow.nbytes
@@ -759,6 +805,7 @@ class DeviceResidencyManager:
         mgr.stats = self.stats
         self.stats.dirty_bytes = 0
         self.stats.pinned_bytes = 0
+        self.stats.rate_bytes = {}
         return mgr
 
     # ------------------------------------------------------------------
@@ -766,6 +813,7 @@ class DeviceResidencyManager:
         ent = self._entries.pop(key, None)
         if ent is not None:
             self.bytes_used -= ent.nbytes
+            self._rate_account(ent, -ent.nbytes)
             self._taccount(key, -ent.nbytes)
             if ent.dirty:
                 self.stats.dirty_bytes -= ent.nbytes

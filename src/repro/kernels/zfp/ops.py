@@ -9,7 +9,7 @@ real TPUs. Both produce bit-identical results (tests/test_zfp_kernel.py).
 from __future__ import annotations
 
 import functools
-from typing import List, Literal, Sequence
+from typing import List, Literal, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -95,11 +95,11 @@ def decompress(
 def compress_units(
     xs: Sequence[jax.Array],
     *,
-    planes: int,
+    planes: Union[int, Sequence[Optional[int]]],
     ndim: int = 3,
     backend: Backend = "ref",
     interpret: bool = True,
-) -> List[Compressed]:
+) -> List[Union[Compressed, jax.Array]]:
     """Batched encode: dispatch every unit's encoder before blocking on
     any payload.
 
@@ -108,11 +108,26 @@ def compress_units(
     the out-of-core executor ships (D2H) each unit as its encode
     finishes instead of synchronizing after the whole batch, and the
     host store seeds all units with a single dispatch burst.
+
+    ``planes`` is either one rate for the whole batch, or a per-unit
+    sequence (adaptive rate control): entry ``None`` skips the codec
+    for that unit and passes the raw array through unchanged — the
+    lossless path of ``RateController``.
     """
+    if isinstance(planes, int):
+        per_unit: List[Optional[int]] = [planes] * len(xs)
+    else:
+        per_unit = list(planes)
+        if len(per_unit) != len(xs):
+            raise ValueError(
+                f"planes sequence length {len(per_unit)} != "
+                f"{len(xs)} units"
+            )
     return [
-        compress(x, planes=planes, ndim=ndim, backend=backend,
-                 interpret=interpret)
-        for x in xs
+        x if p is None else compress(
+            x, planes=p, ndim=ndim, backend=backend, interpret=interpret
+        )
+        for x, p in zip(xs, per_unit)
     ]
 
 

@@ -1,0 +1,351 @@
+"""Differential precision tier for error-budgeted adaptive per-unit
+compression rates (``repro.core.ratecontrol``).
+
+Three runs of the same wave are compared across {unitgrain, depth2,
+temporal2} x residency budgets {0, working-set, tight}:
+
+* the **adaptive** run (per-unit rates under a global relative-error
+  ceiling) — the ceiling must hold at every sweep boundary, audited by
+  the controller's own ``max_observed_rel`` and end-to-end against the
+  exact in-core reference;
+* the **fixed-rate** run through the same ``RateController`` code path
+  (``mode="fixed"``) — it must be *bit-identical* to the PR 9 engine
+  with no controller at all: same output, same transfer multiset (raw
+  and wire bytes included);
+* the **exact** in-core reference — lossless-forced units pay zero
+  codec error, so forcing every unit lossless reproduces it bitwise.
+
+The graph builder must replay an adaptive run's decision log
+transfer-for-transfer on the now-heterogeneous wire bytes at every
+budget (the model/live contract the whole stack shares).
+"""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core.executor import AsyncExecutor
+from repro.core.outofcore import OOCConfig, OutOfCoreWave, paper_code_fields
+from repro.core.precision import assert_bounded_growth, error_curve
+from repro.core.ratecontrol import DEFAULT_LADDER, RateController, rate_label
+from repro.core.taskgraph import build_sweep_tasks
+from repro.core.tenancy import working_set_bytes
+from repro.kernels.stencil import ref as stencil_ref
+from repro.kernels.zfp.ref import Compressed
+
+SHAPE = (96, 12, 12)
+SCHEDULES = ["unitgrain", "depth2", "temporal2"]
+# a ceiling the spec rate (code 4, 12 planes) meets with slack: both
+# runs satisfy it, and the adaptive one exploits the slack
+BUDGET_REL = 1e-2
+SWEEPS = 6
+
+
+def _initial(shape=SHAPE):
+    p_cur = np.asarray(stencil_ref.ricker_source(shape), dtype=np.float32)
+    return 0.95 * p_cur, p_cur, np.full(shape, 0.07, dtype=np.float32)
+
+
+def _cfg(code=4, ndiv=2, bt=2):
+    return OOCConfig(SHAPE, ndiv, bt, paper_code_fields(code))
+
+
+def _budgets(cfg, schedule):
+    ws = working_set_bytes(cfg, schedule="unitgrain")
+    return {"zero": 0, "working-set": ws, "tight": ws // 3}
+
+
+def _transfer_multiset(ex):
+    return Counter(
+        (t.direction, t.field, t.unit, t.sweep, t.raw_bytes,
+         t.wire_bytes, t.flush)
+        for t in ex.transfers
+    )
+
+
+def _run(cfg, schedule, budget, rates=None, sweeps=SWEEPS):
+    ex = AsyncExecutor(
+        cfg, *_initial(), schedule=schedule, cache_bytes=budget,
+        rates=rates,
+    )
+    ex.run(sweeps * cfg.bt)
+    return ex
+
+
+def _reference(sweeps=SWEEPS, bt=2):
+    rp, rc, rv = map(np.asarray, _initial())
+    import jax.numpy as jnp
+    rp, rc = jnp.asarray(rp), jnp.asarray(rc)
+    rp, rc = stencil_ref.run_steps(rp, rc, jnp.asarray(rv), sweeps * bt)
+    return np.asarray(rc)
+
+
+# ----------------------------------------------------------------------
+# fixed mode is bit-identical to the engine with no controller
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("budget_name", ["zero", "working-set", "tight"])
+def test_fixed_mode_bit_identical(schedule, budget_name):
+    cfg = _cfg()
+    budget = _budgets(cfg, schedule)[budget_name]
+    bare = _run(cfg, schedule, budget, rates=None)
+    fixed = _run(
+        cfg, schedule, budget, rates=RateController(cfg, mode="fixed")
+    )
+    assert _transfer_multiset(bare) == _transfer_multiset(fixed)
+    for field in ("p_prev", "p_cur"):
+        np.testing.assert_array_equal(
+            bare.gather(field), fixed.gather(field)
+        )
+    # identity must also hold AFTER the gather's flush traffic
+    assert _transfer_multiset(bare) == _transfer_multiset(fixed)
+
+
+def test_fixed_mode_sync_engine_bit_identical():
+    cfg = _cfg()
+    a = OutOfCoreWave(cfg, *_initial())
+    b = OutOfCoreWave(
+        cfg, *_initial(), rates=RateController(cfg, mode="fixed")
+    )
+    for _ in range(SWEEPS):
+        a.sweep()
+        b.sweep()
+    assert (
+        Counter((t.direction, t.field, t.unit, t.raw_bytes,
+                 t.wire_bytes, t.sweep) for t in a.transfers)
+        == Counter((t.direction, t.field, t.unit, t.raw_bytes,
+                    t.wire_bytes, t.sweep) for t in b.transfers)
+    )
+    np.testing.assert_array_equal(a.gather("p_cur"), b.gather("p_cur"))
+
+
+# ----------------------------------------------------------------------
+# the adaptive run: ceiling holds, reference stays close
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("budget_name", ["zero", "working-set", "tight"])
+def test_adaptive_ceiling_holds(schedule, budget_name):
+    """At every sweep boundary the controller's live audit (max
+    per-encode relative error at the field's global scale) stays under
+    the ceiling, under every schedule x residency budget; the final
+    volume stays near the exact in-core reference."""
+    cfg = _cfg()
+    budget = _budgets(cfg, schedule)[budget_name]
+    ctrl = RateController(cfg, mode="adaptive", error_budget=BUDGET_REL)
+    ex = AsyncExecutor(
+        cfg, *_initial(), schedule=schedule, cache_bytes=budget,
+        rates=ctrl,
+    )
+    kr = ex.temporal
+    done = 0
+    while done < SWEEPS:
+        step = min(kr, SWEEPS - done)
+        ex.sweep(step)
+        done += step
+        assert ctrl.max_observed_rel <= BUDGET_REL, (
+            schedule, budget_name, done, ctrl.max_observed_rel,
+        )
+    assert ctrl.decides > 0  # the adaptive loop actually engaged
+    got = ex.gather("p_cur")
+    ref = _reference(bt=cfg.bt)
+    scale = float(np.max(np.abs(ref)))
+    # end-to-end: per-encode error re-injects every sweep, so allow
+    # SWEEPS re-injections of the ceiling (loose, but fails badly
+    # broken controllers while staying schedule-independent)
+    assert float(np.max(np.abs(got - ref))) <= SWEEPS * BUDGET_REL * scale
+
+
+# temporal2 is excluded here only because this test needs ndiv=4 (a
+# finer decomposition, so the localized pulse leaves some units quiet)
+# and at ndiv=4 the temporal-2 halo exceeds the block interior on this
+# grid. The ceiling/parity tests above cover temporal2.
+@pytest.mark.parametrize("schedule", ["unitgrain", "depth2"])
+def test_adaptive_uses_fewer_wire_bytes_at_equal_ceiling(schedule):
+    """The headline: at a ceiling the fixed rate meets with slack, the
+    adaptive run moves strictly fewer steady-state wire bytes per
+    sweep (it spends the slack on cheaper rates in quiet units).
+
+    Calibration: on this grid the fixed spec rate's per-encode relative
+    error is ~2.3e-2, so a 5e-2 ceiling is one the fixed engine meets
+    with ~2x slack; margin=0.5 keeps loud units at the spec rate while
+    the quiet edge units drop to 6-8 bit planes."""
+    cfg = _cfg(ndiv=4)
+    ceiling = 5e-2
+    fixed = _run(cfg, schedule, 0, rates=None)
+    ctrl = RateController(
+        cfg, mode="adaptive", error_budget=ceiling, margin=0.5
+    )
+    adapt = _run(cfg, schedule, 0, rates=ctrl)
+    assert ctrl.max_observed_rel <= ceiling
+    # steady state: from sweep 2 on (sweep 0 writes the conservative
+    # lossless seed, sweep 1 still fetches it)
+    fixed_wire = sum(
+        t.wire_bytes for t in fixed.transfers if t.sweep >= 2
+    )
+    adapt_wire = sum(
+        t.wire_bytes for t in adapt.transfers if t.sweep >= 2
+    )
+    assert adapt_wire < fixed_wire, (schedule, adapt_wire, fixed_wire)
+
+
+# ----------------------------------------------------------------------
+# model/live parity on heterogeneous wire bytes
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("budget_name", ["zero", "working-set", "tight"])
+def test_adaptive_model_live_parity(schedule, budget_name):
+    """The graph builder replays a finished adaptive run's decision
+    log transfer-for-transfer — kind, unit, sweep, flush AND exact
+    wire bytes — at every residency budget."""
+    cfg = _cfg()
+    budget = _budgets(cfg, schedule)[budget_name]
+    ctrl = RateController(cfg, mode="adaptive", error_budget=BUDGET_REL)
+    live = _run(cfg, schedule, budget, rates=ctrl)
+    tasks = build_sweep_tasks(
+        cfg, sweeps=SWEEPS, schedule=schedule, cache_bytes=budget,
+        rates=ctrl,
+    )
+    graph = Counter(
+        (t.kind, t.field, t.unit, t.sweep, t.flush, round(t.amount))
+        for t in tasks if t.kind in ("h2d", "d2h")
+    )
+    issued = Counter(
+        (t.direction, t.field, t.unit, t.sweep, t.flush, t.wire_bytes)
+        for t in live.transfers
+    )
+    assert issued == graph
+
+
+# ----------------------------------------------------------------------
+# lossless-forced units
+# ----------------------------------------------------------------------
+
+def test_all_units_lossless_forced_is_bitwise_exact():
+    """Forcing every unit lossless removes all codec error: the lossy
+    code-4 config reproduces the exact in-core reference bitwise."""
+    cfg = _cfg()
+    every = [
+        (f, k, i)
+        for f, spec in cfg.fields.items() if spec.compressed
+        for k, i, _ in cfg.plan.units()
+    ]
+    ctrl = RateController(cfg, mode="adaptive", lossless=every)
+    eng = OutOfCoreWave(cfg, *_initial(), rates=ctrl)
+    for _ in range(SWEEPS):
+        eng.sweep()
+    np.testing.assert_array_equal(
+        eng.gather("p_cur"), _reference(bt=cfg.bt)
+    )
+    assert ctrl.max_observed_rel == 0.0
+
+
+def test_single_lossless_unit_stays_raw_under_pressure():
+    """A pinned-lossless unit is never encoded — its host payload is a
+    raw array at every version, while sibling units compress — and the
+    pin survives every decide() even under a tight error budget that
+    would otherwise push rates up, and a loose one that would push
+    them down."""
+    cfg = _cfg()
+    for budget in (1e-6, 1e-1):
+        ctrl = RateController(
+            cfg, mode="adaptive", error_budget=budget,
+            lossless=[("p_prev", "R", 0)],
+        )
+        eng = OutOfCoreWave(cfg, *_initial(), rates=ctrl)
+        for s in range(4):
+            eng.sweep()
+            assert ctrl.rate_for("p_prev", "R", 0, s + 1) is None
+        assert not isinstance(
+            eng.store.get("p_prev", "R", 0), Compressed
+        )
+        # siblings did engage the codec
+        assert isinstance(
+            eng.store.get("vel2", "R", 1), Compressed
+        )
+
+
+# ----------------------------------------------------------------------
+# per-unit error breakdown (precision.error_curve satellite)
+# ----------------------------------------------------------------------
+
+def test_error_curve_reports_per_unit_breakdown():
+    """Every row breaks the error down per storage unit: the global
+    max is exactly the max over units (the spans cover the volume),
+    and the localized source makes the spatial spread real — the
+    quietest unit sits well under the loudest, which is the signal
+    the controller feeds on."""
+    curve = error_curve(code=4, sweeps=4)
+    plan_units = {f"{k}{i}" for k, i, _ in
+                  OOCConfig((64, 24, 24), 2, 4,
+                            paper_code_fields(4)).plan.units()}
+    for row in curve:
+        assert set(row["units"]) == plan_units
+        per_unit = [u["max_abs"] for u in row["units"].values()]
+        assert max(per_unit) == row["max_abs"]
+        for u in row["units"].values():
+            assert u["rel_max"] <= row["rel_max"] + 1e-30
+    spread = [
+        min(u["max_abs"] for u in row["units"].values())
+        / max(u["max_abs"] for u in row["units"].values())
+        for row in curve[:2]
+    ]
+    assert min(spread) < 0.5  # early on, the pulse is localized
+
+
+def test_error_curve_global_keys_unchanged():
+    """The tier-1 regression predicate consumes the same global keys
+    as before the per-unit breakdown landed."""
+    curve = error_curve(code=2, sweeps=3)
+    for row in curve:
+        for key in ("steps", "max_abs", "rms", "ref_scale", "rel_max"):
+            assert key in row
+    assert_bounded_growth(curve, rel_tol=0.010)
+
+
+# ----------------------------------------------------------------------
+# slow tier: the ceiling holds for >= 240 steps
+# ----------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_adaptive_ceiling_holds_240_steps():
+    """The acceptance bar: an adaptive run of >= 240 steps keeps its
+    measured max per-encode relative error under the ceiling the whole
+    way, and the end-to-end curve stays bounded."""
+    cfg = OOCConfig((64, 24, 24), 2, 4, paper_code_fields(4))
+    ctrl = RateController(cfg, mode="adaptive", error_budget=BUDGET_REL)
+    curve = error_curve(
+        code=4, sweeps=60, sample_every=5, rates=ctrl
+    )
+    assert curve[-1]["steps"] >= 240
+    assert ctrl.max_observed_rel <= BUDGET_REL
+    assert_bounded_growth(curve, rel_tol=0.35)
+
+
+# ----------------------------------------------------------------------
+# controller unit behavior (fast, no engine)
+# ----------------------------------------------------------------------
+
+def test_histogram_and_labels():
+    cfg = _cfg()
+    ctrl = RateController(cfg, mode="fixed")
+    hist = ctrl.rate_histogram(cfg.plan, 0)
+    n_units = len(cfg.plan.units())
+    assert hist == {"p12": 2 * n_units}  # p_prev + vel2, all at spec
+    assert rate_label(None) == "raw"
+    assert rate_label(12) == "p12"
+
+
+def test_ladder_is_sorted_and_validated():
+    cfg = _cfg()
+    assert RateController(cfg, ladder=[16, 8, 8, 24]).ladder == (8, 16, 24)
+    assert DEFAULT_LADDER == tuple(sorted(DEFAULT_LADDER))
+    with pytest.raises(ValueError):
+        RateController(cfg, mode="nope")
+    with pytest.raises(ValueError):
+        RateController(cfg, ladder=[0, 8])
+    with pytest.raises(ValueError):
+        RateController(cfg, margin=0.0)

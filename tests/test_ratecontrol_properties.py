@@ -1,0 +1,272 @@
+"""Property-based tests (hypothesis) for error-budgeted adaptive rate
+control (``repro.core.ratecontrol``).
+
+The controller is a pure policy object replayed by three consumers
+(live engines, graph builder, checkpoint restore), so any
+non-determinism or order sensitivity silently breaks the model/live
+transfer-parity contract and the restore-bit-identity contract. These
+properties pin the invariants under arbitrary observation streams:
+
+* determinism: the same observe/decide sequence always produces the
+  same decision log, the same ``rate_for`` answers at every sweep, and
+  the same ``state_dict()``;
+* budget monotonicity: a tighter error budget never DEcreases a
+  unit's rate — planes only go up, with lossless (``None``) ordering
+  above every ladder rate;
+* ``state_dict``/``from_state`` round-trips bit-identically at any
+  point mid-stream, and the restored controller continues deciding
+  exactly what the original would;
+* mixed-size residency accounting: the per-rate byte gauges
+  (``CacheStats.rate_bytes``) exactly partition the resident bytes of
+  rate-labeled payloads after EVERY op, across deposits of differing
+  sizes per key, evictions, COW pins/releases and rollbacks;
+* executor-level: an adaptive checkpoint cut at ANY sweep boundary
+  restores the rate map bit-identically and the resumed run finishes
+  bit-identical to an uninterrupted one.
+"""
+
+import math
+import tempfile
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.executor import AsyncExecutor
+from repro.core.outofcore import OOCConfig, paper_code_fields
+from repro.core.ratecontrol import RateController, rate_label
+from repro.core.unitcache import DeviceResidencyManager
+from repro.kernels.stencil import ref as stencil_ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=60, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+SHAPE = (96, 12, 12)
+
+
+def _cfg():
+    return OOCConfig(SHAPE, 2, 2, paper_code_fields(4))
+
+
+# ----------------------------------------------------------------------
+# controller-only properties: synthetic observation streams
+# ----------------------------------------------------------------------
+# an event is one observe() (on a read-write compressed field) or one
+# decide() at the next sweep boundary
+_obs = st.tuples(
+    st.just("obs"),
+    st.sampled_from(["p_cur", "p_prev"]),
+    st.sampled_from(["C", "R"]),
+    st.integers(0, 2),
+    st.one_of(st.none(), st.integers(4, 28)),  # planes of the encode
+    st.floats(0.0, 0.05, allow_nan=False),  # abs_err
+    st.floats(0.0, 1.0, allow_nan=False),  # scale
+)
+_events = st.lists(
+    st.one_of(_obs, st.just(("decide",))), max_size=40
+)
+
+
+def _drive(ctrl, events):
+    """Apply an event stream; returns the last sweep boundary."""
+    sweep = 0
+    for ev in events:
+        if ev[0] == "obs":
+            _, field, kind, idx, planes, abs_err, scale = ev
+            ctrl.observe(field, kind, idx, planes, abs_err, scale)
+        else:
+            sweep += 1
+            ctrl.decide(sweep)
+    return sweep
+
+
+def _rate_table(ctrl, last_sweep):
+    """Every rate_for answer over the unit universe x sweeps."""
+    return {
+        (f, k, i, s): ctrl.rate_for(f, k, i, s)
+        for f in ("p_cur", "p_prev", "vel2")
+        for k in ("C", "R")
+        for i in range(3)
+        for s in range(last_sweep + 2)
+    }
+
+
+def _rank(rate):
+    """Total order of rates, lossless (None) above every ladder rate."""
+    return math.inf if rate is None else rate
+
+
+@given(_events)
+def test_controller_is_deterministic(events):
+    """Two fresh controllers fed the identical stream agree on the
+    whole decision log, every rate_for answer, and state_dict()."""
+    a = RateController(_cfg(), mode="adaptive", error_budget=1e-2)
+    b = RateController(_cfg(), mode="adaptive", error_budget=1e-2)
+    sa = _drive(a, events)
+    sb = _drive(b, events)
+    assert sa == sb
+    assert a.state_dict() == b.state_dict()
+    assert _rate_table(a, sa) == _rate_table(b, sb)
+
+
+@given(_events, st.floats(1e-5, 1e-1), st.floats(1.5, 16.0))
+def test_tighter_budget_never_decreases_rates(events, budget, factor):
+    """Monotonicity: at a tighter budget, every unit's decided rate at
+    every sweep has at least as many planes (None = lossless orders
+    above all ladder rates)."""
+    tight = RateController(_cfg(), mode="adaptive", error_budget=budget)
+    loose = RateController(
+        _cfg(), mode="adaptive", error_budget=budget * factor
+    )
+    s = _drive(tight, events)
+    _drive(loose, events)
+    tt, tl = _rate_table(tight, s), _rate_table(loose, s)
+    for key in tt:
+        assert _rank(tt[key]) >= _rank(tl[key]), (key, tt[key], tl[key])
+
+
+@given(_events, _events)
+def test_state_roundtrip_continues_identically(prefix, suffix):
+    """Serialize mid-stream, restore into a fresh controller, continue
+    with the same suffix: the restored controller's decision log and
+    state match the uninterrupted one bit-for-bit."""
+    cfg = _cfg()
+    whole = RateController(cfg, mode="adaptive", error_budget=1e-2)
+    _drive(whole, prefix)
+    cut = RateController.from_state(cfg, whole.state_dict())
+    assert cut.state_dict() == whole.state_dict()
+    # continue both (suffix sweeps resume after the prefix's last)
+    sw = _drive(whole, suffix)
+    sc = _drive(cut, suffix)
+    assert sw == sc
+    assert cut.state_dict() == whole.state_dict()
+    assert _rate_table(cut, sc) == _rate_table(whole, sw)
+
+
+@given(_events)
+def test_fixed_mode_ignores_observations(events):
+    """In fixed mode the stream is inert: rate_for is the field spec's
+    planes for every unit at every sweep, forever."""
+    cfg = _cfg()
+    ctrl = RateController(cfg, mode="fixed")
+    s = _drive(ctrl, events)
+    for (f, k, i, sw), rate in _rate_table(ctrl, s).items():
+        spec = cfg.fields[f]
+        want = spec.planes if spec.compressed else None
+        assert rate == want, (f, k, i, sw, rate)
+    assert ctrl.decides == 0
+    assert ctrl.max_observed_rel == 0.0
+
+
+# ----------------------------------------------------------------------
+# mixed-size residency accounting (CacheStats.rate_bytes)
+# ----------------------------------------------------------------------
+BUDGET = 150
+KEYS = ["a", "b", "c", "d"]
+LABELS = ["raw", "p6", "p12"]
+
+_cache_op = st.one_of(
+    st.tuples(
+        st.just("deposit"),
+        st.sampled_from(KEYS),
+        st.integers(0, 3),  # version
+        st.integers(1, 70),  # nbytes — varies per version on purpose
+        st.booleans(),  # dirty
+        st.sampled_from(LABELS),
+    ),
+    st.tuples(st.just("lookup"), st.sampled_from(KEYS),
+              st.integers(0, 3)),
+    st.tuples(st.just("pin"), st.sampled_from(KEYS)),
+    st.tuples(st.just("release"), st.sampled_from(KEYS)),
+    st.just(("reset",)),
+)
+
+
+def _expected_rate_bytes(mgr):
+    exp = {}
+    for ent in list(mgr._entries.values()) + list(mgr._shadows.values()):
+        if ent.rate is not None:
+            exp[ent.rate] = exp.get(ent.rate, 0) + ent.nbytes
+    return exp
+
+
+@given(st.lists(_cache_op, max_size=40))
+def test_rate_gauges_partition_resident_bytes(ops):
+    """After EVERY op — deposits of differing sizes per key, LRU
+    evictions, COW shadows, releases, rollback — the per-rate gauges
+    equal a from-scratch recount of resident rate-labeled payloads,
+    and (every payload labeled here) their sum equals bytes_used."""
+    mgr = DeviceResidencyManager(BUDGET)
+    for op in ops:
+        if op[0] == "deposit":
+            _, k, ver, nbytes, dirty, lbl = op
+            mgr.deposit(k, ver, f"{k}@{ver}", nbytes, dirty=dirty,
+                        rate=lbl)
+        elif op[0] == "lookup":
+            mgr.lookup(op[1], op[2])
+        elif op[0] == "pin":
+            if op[1] not in mgr._shadows:
+                mgr.pin(op[1])
+        elif op[0] == "release":
+            mgr.release(op[1])
+        else:
+            # crash rollback: residency is lost, gauges must reset
+            mgr = mgr.rollback_reset()
+        exp = _expected_rate_bytes(mgr)
+        assert mgr.stats.rate_bytes == exp, (op, exp)
+        assert all(v > 0 for v in mgr.stats.rate_bytes.values())
+        # every payload in this test is labeled, so the gauges must
+        # partition the total residency exactly (shadows included —
+        # COW-preserved bytes stay resident until release)
+        assert sum(exp.values()) == mgr.bytes_used
+
+
+# ----------------------------------------------------------------------
+# executor-level: adaptive checkpoint cut at ANY sweep boundary
+# ----------------------------------------------------------------------
+TOTAL_SWEEPS = 4
+
+
+def _initial():
+    p_cur = np.asarray(
+        stencil_ref.ricker_source(SHAPE), dtype=np.float32
+    )
+    return 0.95 * p_cur, p_cur, np.full(SHAPE, 0.07, dtype=np.float32)
+
+
+def _adaptive_executor():
+    cfg = _cfg()
+    ctrl = RateController(cfg, mode="adaptive", error_budget=1e-2)
+    return AsyncExecutor(
+        cfg, *_initial(), schedule="depth2", rates=ctrl
+    )
+
+
+@settings(deadline=None, max_examples=4, derandomize=True)
+@given(st.integers(1, TOTAL_SWEEPS - 1))
+def test_adaptive_checkpoint_any_boundary_bit_identical(cut_at):
+    """Cut an adaptive run's checkpoint at an arbitrary sweep
+    boundary: the restored controller's rate map is bit-identical and
+    the resumed run finishes bit-identical to an uninterrupted one."""
+    ref = _adaptive_executor()
+    ref.run(TOTAL_SWEEPS * ref.cfg.bt)
+    expected = ref.gather("p_cur")
+    want_state = ref.rates.state_dict()
+
+    live = _adaptive_executor()
+    live.run(cut_at * live.cfg.bt)
+    with tempfile.TemporaryDirectory() as d:
+        live.checkpoint(d)
+        resumed = AsyncExecutor.restore(d)
+    assert resumed.rates is not None
+    assert resumed.rates.state_dict() == live.rates.state_dict()
+    resumed.run((TOTAL_SWEEPS - cut_at) * resumed.cfg.bt)
+    assert resumed.rates.state_dict() == want_state
+    np.testing.assert_array_equal(resumed.gather("p_cur"), expected)

@@ -67,6 +67,15 @@ GUARDED_SUFFIXES = (
     "tenancy_interleaved_makespan_s",
     "tenancy_serial_makespan_s",
     "tenancy_makespan_ratio",
+    # adaptive rate control (PR 10): steady wire bytes at the equal
+    # error ceiling are exact functions of the decision log, and the
+    # ratio is the headline invariant (adaptive < fixed); the observed
+    # per-encode relative error is lower-is-better too — growth means
+    # the controller started risking more of the budget.
+    "adaptive_steady_wire_per_sweep",
+    "fixed_steady_wire_per_sweep",
+    "adaptive_wire_ratio",
+    "adaptive_max_observed_rel",
 )
 
 
